@@ -1,0 +1,83 @@
+"""Roofline table generator: reads the dry-run JSON artifacts and renders
+the per-(arch x shape x mesh) roofline terms for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+
+
+def load(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(results: list[dict]) -> str:
+    head = ("| arch | shape | mesh | compute | memory | collective | dominant "
+            "| MODEL_FLOPS/HLO | temp/dev | note |")
+    sep = "|" + "---|" * 10
+    lines = [head, sep]
+    for r in results:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - "
+                         f"| - | - | - | - | SKIP: {r['skipped']} |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - "
+                         f"| - | - | - | - | ERROR |")
+            continue
+        rf = r["roofline"]
+        uf = rf.get("useful_fraction")
+        temp = (r["memory"]["temp_bytes"] or 0) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {_fmt_s(rf['compute_s'])} | {_fmt_s(rf['memory_s'])} "
+            f"| {_fmt_s(rf['collective_s'])} | {rf['dominant']} "
+            f"| {uf:.2f} | {temp:.2f}GB | |" if uf is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - | - | - "
+            f"| {temp:.2f}GB | |")
+    return "\n".join(lines)
+
+
+def dominant_summary(results: list[dict]) -> dict:
+    out = {"compute": [], "memory": [], "collective": []}
+    for r in results:
+        if "roofline" in r:
+            out[r["roofline"]["dominant"]].append(
+                (r["arch"], r["shape"],
+                 max(r["roofline"]["compute_s"], r["roofline"]["memory_s"],
+                     r["roofline"]["collective_s"])))
+    return out
+
+
+def worst_cases(results: list[dict], n=5):
+    """Cases with the worst roofline fraction (dominant >> others) and the
+    most collective-bound — hillclimb candidates."""
+    rows = []
+    for r in results:
+        if "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        terms = sorted([rf["compute_s"], rf["memory_s"], rf["collective_s"]],
+                       reverse=True)
+        imbalance = terms[0] / max(terms[1], 1e-12)
+        rows.append((imbalance, rf["dominant"], r["arch"], r["shape"]))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+if __name__ == "__main__":
+    import sys
+    res = load(sys.argv[1] if len(sys.argv) > 1 else "dryrun_single_pod.json")
+    print(roofline_table(res))
+    print()
+    for imb, dom, arch, shape in worst_cases(res, 8):
+        print(f"imbalance {imb:7.1f}x  {dom:10s} {arch} x {shape}")

@@ -1,0 +1,61 @@
+"""Table 6 analogue: maximum engine throughput under max-rate request push.
+
+The paper compares vLLM@H800 / vLLM@910c / xLLM@910c to show its platform is
+representative. Our platform is the JAX engine on this container's CPU: we
+measure its real max-rate throughput (reduced model), and report the perf
+model's *projection* of the same workload onto TPU v5e — the number the
+cluster simulation uses — so the two layers of the reproduction are tied
+together.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.hardware import TPU_V5E
+from repro.core.perf_model import PerfModel
+from repro.core.request import Kind, Request
+from repro.engine.engine import ServingEngine
+from repro.models.model import build_model
+
+
+def run_engine_throughput(arch="qwen2.5-7b", n_requests=24, prompt_len=64,
+                          output_len=32, seed=0, verbose=True):
+    cfg = get_config(arch).reduced(layers=4, d_model=512, vocab=4096, d_ff=1536)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(seed))
+    eng = ServingEngine(model, params, num_pages=1024, page_size=16,
+                        decode_buckets=(8, 16, 32))
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for _ in range(n_requests):
+        prompt = list(rng.randint(0, cfg.vocab_size, prompt_len))
+        r = Request(Kind.OFFLINE, 0.0, prompt_len, output_len)
+        eng.add_request(r, prompt)
+        reqs.append(r)
+    # warmup compile: prefill one + a decode step
+    eng.prefill(reqs[0].rid)
+    eng.decode_step([reqs[0].rid])
+
+    t0 = time.perf_counter()
+    for r in reqs[1:]:
+        eng.prefill(r.rid)
+    while any(not r.done for r in reqs):
+        eng.decode_step([r.rid for r in reqs if not r.done][:32])
+    dt = time.perf_counter() - t0
+    total_tokens = sum(r.prompt_len + r.generated for r in reqs[1:]) \
+        + reqs[0].generated
+    tput = total_tokens / dt
+    # perf-model projection of the full-size model on v5e (single chip slice)
+    pm = PerfModel(get_config(arch), TPU_V5E, tp=4)
+    dec = pm.decode_estimate([prompt_len + output_len // 2] * 256)
+    projected = 256 / dec.latency
+    if verbose:
+        print(f"  engine (CPU, reduced {arch}): {tput:,.0f} tok/s "
+              f"({total_tokens} tokens in {dt:.1f}s)")
+        print(f"  perf-model projection (v5e tp=4, batch 256 decode): "
+              f"{projected:,.0f} tok/s")
+    return {"cpu_tokens_per_s": tput, "v5e_projected_decode_tokens_per_s": projected}

@@ -1,0 +1,115 @@
+"""§3.3.2 validation: the roofline latency model's accuracy (paper: ≈5 %).
+
+We cannot time an Ascend 910c, so we do what the paper did on *this*
+platform: profile a small set of calibration runs of the REAL JAX engine on
+CPU, fit the Table-4 parameters (F_*, M_*, O_p, O_d) by least squares over
+the model's own FLOPs/bytes terms, and report mean absolute percentage
+error on held-out configurations.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.hardware import cpu_measured
+from repro.core.perf_model import HardwareParams, PerfModel
+from repro.core.request import Kind, Request
+from repro.engine.engine import ServingEngine
+from repro.models.model import build_model
+
+
+def _measure(engine, cfg, kind, size, ctx, reps=3):
+    """Median wall time of a prefill(size tokens) or decode(batch=size)."""
+    rng = np.random.RandomState(0)
+    if kind == "prefill":
+        times = []
+        for i in range(reps):
+            prompt = list(rng.randint(0, cfg.vocab_size, size))
+            r = Request(Kind.ONLINE, 0.0, size, 2)
+            engine.add_request(r, prompt)
+            t0 = time.perf_counter()
+            engine.prefill(r.rid)
+            times.append(time.perf_counter() - t0)
+            engine.cache.free(r.rid)
+        return float(np.median(times))
+    # decode: build `size` requests with ~ctx context
+    rids = []
+    for _ in range(size):
+        prompt = list(rng.randint(0, cfg.vocab_size, ctx))
+        r = Request(Kind.ONLINE, 0.0, ctx, 64)
+        engine.add_request(r, prompt)
+        engine.prefill(r.rid)
+        rids.append(r.rid)
+    engine.decode_step(rids)  # warm the jit cache
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        engine.decode_step(rids)
+        times.append(time.perf_counter() - t0)
+    for rid in rids:
+        engine.cache.free(rid)
+    return float(np.median(times))
+
+
+def _terms(pm: PerfModel, kind, size, ctx):
+    """(gemm_flops, gemm_bytes, attn_flops, attn_bytes) for the workload."""
+    est = (pm.prefill_estimate([size]) if kind == "prefill"
+           else pm.decode_estimate([ctx] * size, detail=True))
+    gf = sum(o.flops for o in est.ops if o.kind == "gemm")
+    gb = sum(o.bytes for o in est.ops if o.kind == "gemm")
+    af = sum(o.flops for o in est.ops if o.kind.startswith("attn"))
+    ab = sum(o.bytes for o in est.ops if o.kind.startswith("attn"))
+    return gf, gb, af, ab
+
+
+def run_accuracy(arch="qwen2.5-7b", seed=0, verbose=True):
+    cfg = get_config(arch).reduced(layers=4, d_model=512, vocab=4096, d_ff=1536)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(seed))
+    engine = ServingEngine(model, params, num_pages=2048, page_size=16,
+                           decode_buckets=(1, 2, 4, 8, 16, 32))
+    cases = [("prefill", 64, 0), ("prefill", 128, 0), ("prefill", 256, 0),
+             ("prefill", 512, 0),
+             ("decode", 1, 64), ("decode", 4, 64), ("decode", 8, 128),
+             ("decode", 16, 128), ("decode", 32, 256)]
+    pm0 = PerfModel(cfg, cpu_measured())
+    rows = []
+    for kind, size, ctx in cases:
+        t = _measure(engine, cfg, kind, size, ctx)
+        rows.append((kind, size, ctx, t, _terms(pm0, kind, size, ctx)))
+
+    # least squares fit of [1/F, 1/M, O_p, O_d] over latency = gf/F + max... ;
+    # on CPU there is no separate attention unit, so fit a single F and M
+    # with Eq. 1 linearized as  t ≈ flops/F + bytes/M + O_kind
+    A, y = [], []
+    for kind, size, ctx, t, (gf, gb, af, ab) in rows:
+        A.append([gf + af, gb + ab, 1.0 if kind == "prefill" else 0.0,
+                  0.0 if kind == "prefill" else 1.0])
+        y.append(t)
+    coef, *_ = np.linalg.lstsq(np.asarray(A), np.asarray(y), rcond=None)
+    inv_F, inv_M, O_p, O_d = [max(c, 1e-15) for c in coef]
+    hw = HardwareParams(name="cpu_fit", F_g=1 / inv_F, F_ap=1 / inv_F,
+                        F_ad=1 / inv_F, M_g=1 / inv_M, M_a=1 / inv_M,
+                        O_p=max(O_p, 0.0), O_d=max(O_d, 0.0), B_c=1e9,
+                        hbm_capacity=8e9, peak_flops=1 / inv_F,
+                        peak_hbm_bw=1 / inv_M)
+    pm = PerfModel(cfg, hw)
+
+    # held-out evaluation
+    held = [("prefill", 96, 0), ("prefill", 384, 0), ("decode", 2, 96),
+            ("decode", 8, 256), ("decode", 24, 128)]
+    errs = []
+    for kind, size, ctx in held:
+        t = _measure(engine, cfg, kind, size, ctx)
+        pred = (pm.prefill_estimate([size]).latency if kind == "prefill"
+                else pm.decode_estimate([ctx] * size).latency)
+        err = abs(pred - t) / t
+        errs.append(err)
+        if verbose:
+            print(f"  {kind:8s} size={size:4d} ctx={ctx:4d} "
+                  f"measured={t*1e3:7.2f}ms predicted={pred*1e3:7.2f}ms "
+                  f"err={err:.1%}", flush=True)
+    return float(np.mean(errs)), hw

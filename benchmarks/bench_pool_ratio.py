@@ -1,0 +1,54 @@
+"""Beyond-paper experiment: pool-size ratios.
+
+The paper evaluates 1 latency-relaxed + 1 latency-strict instance (§5.1.1).
+Production clusters choose a ratio; OOCO's flexible offline-decode placement
+should make throughput *less sensitive* to that ratio than the baselines
+(its offline decode soaks up whichever pool has slack). We sweep
+(n_relaxed, n_strict) at fixed total instances and measure the max offline
+throughput under the online SLO.
+"""
+from __future__ import annotations
+
+from repro.cluster.simulator import SimConfig, Simulator
+from repro.configs import get_config
+from repro.core.hardware import TPU_V5E
+from repro.data import traces as tr
+
+
+def run_pool_ratio(arch="qwen2.5-7b", total=4, duration=150.0, tp=4,
+                   online_qps=18.0, offline_qps=32.0, seed=0, verbose=True):
+    cfg = get_config(arch)
+    online = tr.online_trace("ooc", duration=duration, mean_qps=online_qps,
+                             seed=seed)
+    pool = tr.offline_requests(30000, seed=seed + 1)
+    rows = []
+    for n_relaxed in range(1, total):
+        n_strict = total - n_relaxed
+        for policy in ("online_priority", "ooco"):
+            sim = Simulator(cfg, TPU_V5E, policy,
+                            SimConfig(duration=duration, tp=tp,
+                                      n_relaxed=n_relaxed, n_strict=n_strict,
+                                      seed=seed))
+            m = sim.run(online, tr.with_uniform_qps(pool, offline_qps))
+            rows.append({"relaxed": n_relaxed, "strict": n_strict,
+                         "policy": policy,
+                         "viol": m["online_violation_rate"],
+                         "off_tok_s": m["offline_token_throughput"]})
+            if verbose:
+                print(f"  P{n_relaxed}:D{n_strict} {policy:16s} "
+                      f"viol={m['online_violation_rate']:.3f} "
+                      f"off={m['offline_token_throughput']:8.1f} tok/s",
+                      flush=True)
+    return rows
+
+
+def sensitivity(rows) -> dict:
+    """max/min offline throughput across SLO-feasible ratios, per policy."""
+    out = {}
+    for policy in ("online_priority", "ooco"):
+        ok = [r["off_tok_s"] for r in rows
+              if r["policy"] == policy and r["viol"] <= 0.03]
+        if ok:
+            out[policy] = {"best": max(ok), "worst": min(ok),
+                           "sensitivity": max(ok) / max(min(ok), 1e-9)}
+    return out

@@ -1,0 +1,50 @@
+"""Figure 3 reproduction: roofline scatter of prefill/decode executions.
+
+Each point is one Prefill or Decode iteration at a given (batch, length):
+arithmetic intensity vs achieved FLOP/s under the perf model, plus latency.
+Reproduces the paper's qualitative structure: prefill compute-saturates past
+a few hundred tokens; decode rides the memory-bandwidth roof and bends
+toward compute as batch grows.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.hardware import TPU_V5E
+from repro.core.perf_model import PerfModel
+
+
+def run_scatter(arch="qwen2.5-7b", tp=4):
+    pm = PerfModel(get_config(arch), TPU_V5E, tp=tp)
+    points = []
+    for s in (32, 64, 128, 256, 512, 1024, 2048, 4096, 8192):
+        est = pm.prefill_estimate([s])
+        points.append(("prefill", 1, s, est))
+    for b in (1, 4, 16, 64, 256, 512):
+        for ctx in (256, 1024, 4096):
+            est = pm.decode_estimate([ctx] * b)
+            points.append(("decode", b, ctx, est))
+    rows = []
+    for kind, b, s, est in points:
+        ai = est.flops / max(est.bytes, 1)
+        achieved = est.flops / max(est.latency - est.overhead, 1e-9)
+        rows.append({
+            "kind": kind, "batch": b, "len": s,
+            "arith_intensity": ai,
+            "achieved_tflops": achieved / 1e12,
+            "latency_ms": est.latency * 1e3,
+            "bottleneck": est.bottleneck,
+        })
+    return rows
+
+
+def saturation_points(arch="qwen2.5-7b", tp=4):
+    """Paper §2.3 claims: prefill compute-saturates around a few hundred
+    tokens; decode GEMMs turn compute-bound around batch ~300 (910c)."""
+    pm = PerfModel(get_config(arch), TPU_V5E, tp=tp)
+    prefill_sat = None
+    for s in range(32, 4096, 32):
+        if pm.prefill_estimate([s]).bottleneck == "compute":
+            prefill_sat = s
+            break
+    return {"prefill_compute_saturation_tokens": prefill_sat,
+            "decode_bs_sat": pm.compute_saturated_batch(1024)}

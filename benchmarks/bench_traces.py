@@ -1,0 +1,36 @@
+"""Table 5 / Figure 1 reproduction: synthesized trace statistics and the
+§5.1.3 scaling invariants (pattern preservation)."""
+from __future__ import annotations
+
+from repro.data import traces as tr
+
+
+def run_traces(duration=600.0, seed=0):
+    rows = {}
+    for ds, key in [("ooc", "ooc_online"), ("azure_conv", "azure_conv"),
+                    ("azure_code", "azure_code")]:
+        t = tr.online_trace(ds, duration=duration, mean_qps=4.0, seed=seed)
+        s = tr.trace_stats(t)
+        want_p, want_o = tr.DATASET_STATS[key]
+        rows[ds] = {**s, "target_prompt": want_p, "target_output": want_o}
+    off = tr.offline_requests(5000, seed=seed)
+    s = tr.trace_stats(off)
+    want_p, want_o = tr.DATASET_STATS["ooc_offline"]
+    rows["ooc_offline"] = {**s, "target_prompt": want_p, "target_output": want_o}
+    return rows
+
+
+def run_scaling_invariance(duration=600.0, seed=0):
+    """§5.1.3: scaling changes the rate but preserves burst structure."""
+    base = tr.online_trace("ooc", duration=duration, mean_qps=4.0, seed=seed)
+    s0 = tr.trace_stats(base)
+    out = {"base": s0}
+    for f in (0.5, 2.0):
+        scaled = tr.scale_trace(base, f, seed=seed)
+        s = tr.trace_stats(scaled)
+        out[f"x{f}"] = {
+            **s,
+            "rate_ratio": s["mean_qps"] / s0["mean_qps"],
+            "burstiness_ratio": s["peak_over_mean"] / s0["peak_over_mean"],
+        }
+    return out

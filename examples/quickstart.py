@@ -1,0 +1,62 @@
+"""Quickstart: build any assigned architecture, generate a few tokens, and
+predict its serving latency with the OOCO roofline perf model.
+
+  PYTHONPATH=src python examples/quickstart.py [--arch qwen3-8b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED, get_config
+from repro.core.hardware import TPU_V5E
+from repro.core.perf_model import PerfModel
+from repro.models.model import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b", choices=ASSIGNED)
+    ap.add_argument("--tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    full = get_config(args.arch)
+    cfg = full.reduced()  # CPU-scale variant of the same family
+    print(f"arch={full.name} [{full.family}]  full: {full.num_layers}L "
+          f"d={full.d_model} (~{full.num_params()/1e9:.1f}B params) "
+          f"| running reduced: {cfg.num_layers}L d={cfg.d_model}")
+
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompt = list(rng.randint(0, cfg.vocab_size, 16))
+    batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["frontend_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(1), (1, cfg.num_frontend_tokens, cfg.d_model),
+            jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frontend_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(1), (1, 64, cfg.d_model), jnp.bfloat16)
+
+    cache_len = len(prompt) + args.tokens + cfg.num_frontend_tokens
+    logits, cache = model.prefill(params, batch, cache_len=cache_len)
+    out = [int(jnp.argmax(logits, -1)[0])]
+    for _ in range(args.tokens - 1):
+        logits, cache = model.decode_step(
+            params, jnp.asarray([out[-1]], jnp.int32), cache)
+        out.append(int(jnp.argmax(logits, -1)[0]))
+    print("generated token ids:", out)
+
+    # perf-model view of the FULL-SIZE model on TPU v5e
+    pm = PerfModel(full, TPU_V5E, tp=4)
+    p = pm.prefill_estimate([1024])
+    d = pm.decode_estimate([1024] * 64)
+    print(f"v5e(tp=4) predictions: prefill(1024)={p.latency*1e3:.1f}ms "
+          f"[{p.bottleneck}]  decode(B=64,ctx=1024)={d.latency*1e3:.1f}ms "
+          f"[{d.bottleneck}]  bs_sat={pm.compute_saturated_batch(1024)}")
+
+
+if __name__ == "__main__":
+    main()

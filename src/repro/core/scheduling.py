@@ -1,0 +1,231 @@
+"""OOCO's four scheduling points (paper §3.4, Algorithms 1 & 2).
+
+All functions are pure decisions over request views + the perf model, so the
+discrete-event simulator and the real JAX engine execute the *same* logic.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+from repro.core.perf_model import PerfModel
+from repro.core.request import Kind, Request
+
+LatencyFn = Callable[[Sequence[int]], float]  # context lens -> predicted step s
+
+
+def _latency(pm: PerfModel, reqs: Sequence[Request]) -> float:
+    if not reqs:
+        return 0.0
+    return pm.decode_estimate([r.context_len for r in reqs]).latency
+
+
+# ---------------------------------------------------------------------------
+# §3.4.4  Mix Decoding Selection (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def mix_decoding_selection(
+    online: Sequence[Request],
+    offline: Sequence[Request],
+    slo: float,
+    pm: PerfModel,
+    *,
+    max_probe: int = 8,
+    rng: random.Random | None = None,
+    mem_budget_bytes: float | None = None,
+) -> list[Request]:
+    """Per decode step: all online requests first, then offline requests under
+    the TPOT SLO — randomized probing (anti-starvation) followed by
+    sort-by-length + binary-search for the largest feasible prefix."""
+    import numpy as np
+
+    rng = rng or random.Random(0)
+    batch: list[Request] = list(online)
+    if not offline:
+        return batch
+
+    # incremental latency bookkeeping: L = O_d + gemm(B) + sum(attn terms)
+    attn_sum = float(pm.decode_attn_time(
+        np.array([r.context_len for r in batch], np.float64)).sum()) if batch else 0.0
+    kv_sum = pm.kv_bytes([r.context_len for r in batch]) if batch else 0.0
+
+    def lat_of(B: int, attn: float) -> float:
+        return pm.hw.O_d + float(pm._decode_batch_terms(float(B))[2]) + attn
+
+    if lat_of(len(batch), attn_sum) > slo:
+        return batch  # online already at/over SLO: best-effort, no offline
+
+    remaining = list(offline)
+    probes = min(max_probe, len(remaining))
+    for _ in range(probes):
+        r = remaining.pop(rng.randrange(len(remaining)))
+        a = float(pm.decode_attn_time(np.array([r.context_len], np.float64))[0])
+        kv = pm.kv_bytes([r.context_len])
+        if lat_of(len(batch) + 1, attn_sum + a) <= slo and (
+                mem_budget_bytes is None or kv_sum + kv <= mem_budget_bytes):
+            batch.append(r)
+            attn_sum += a
+            kv_sum += kv
+        # else: discard for this step (Alg. 2 line 7)
+
+    if remaining and lat_of(len(batch), attn_sum) < slo:
+        remaining.sort(key=lambda r: r.context_len)
+        ctx = np.array([r.context_len for r in remaining], np.float64)
+        curve = pm.decode_latency_curve(
+            np.array([r.context_len for r in batch], np.float64), ctx)
+        ok = curve <= slo
+        if mem_budget_bytes is not None:
+            per_kv = pm.kv_bytes_per_request(ctx)
+            kv_curve = kv_sum + np.concatenate([[0.0], np.cumsum(per_kv)])
+            ok &= kv_curve <= mem_budget_bytes
+        # largest feasible prefix (curve is monotone in k)
+        k = int(np.searchsorted(~ok[1:], True)) if len(ok) > 1 else 0
+        batch.extend(remaining[:k])
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# §3.4.3  Offline Request Migration (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LengthPreference:
+    """Pull-model preference a latency-strict node sends to relaxed nodes."""
+    target_len: int      # preferred context length of requests to pull
+    mode: str            # "longest" | "bounded" | "shortest"
+    count: int = 1       # how many requests it is willing to absorb
+
+
+def migration_decision(
+    batch: Sequence[Request],
+    all_node_requests_included: bool,
+    slo: float,
+    pm: PerfModel,
+    *,
+    mem_budget_bytes: float,
+    slo_margin: float = 0.85,
+    max_probe_len: int = 1 << 17,
+) -> LengthPreference | None:
+    """Algorithm 1: a latency-strict node with SLO headroom computes the
+    request-length preference that best fills its dominant bottleneck."""
+    import numpy as np
+
+    ctx = np.array([r.context_len for r in batch], np.float64)
+    B = len(batch)
+    # O(1)-per-probe decomposition: L(B ∪ extras) = O_d + gemm(B+k) + Σ attn
+    attn_base = float(pm.decode_attn_time(ctx).sum()) if B else 0.0
+    kv_base = pm.kv_bytes(ctx) if B else 0.0
+
+    def lat_with(l: int, k: int) -> float:
+        a = float(pm.decode_attn_time(np.array([l], np.float64))[0])
+        return (pm.hw.O_d + float(pm._decode_batch_terms(float(B + k))[2])
+                + attn_base + k * a)
+
+    def mem_ok(l: int, k: int) -> bool:
+        per = float(pm.kv_bytes_per_request(np.array([l], np.float64))[0])
+        return kv_base + k * per <= mem_budget_bytes
+
+    lat = pm.hw.O_d + (float(pm._decode_batch_terms(float(B))[2]) + attn_base
+                       if B else 0.0)
+    if not (lat < slo * slo_margin and all_node_requests_included):
+        return None  # no migration (Alg. 1 line 16)
+
+    bs_sat = pm.compute_saturated_batch(int(ctx.mean()) if B else 512)
+
+    def max_len_under(k: int) -> int:
+        lo, hi, best = 1, max_probe_len, 0
+        while lo <= hi:
+            mid = (lo + hi) // 2
+            if lat_with(mid, k) <= slo and mem_ok(mid, k):
+                best, lo = mid, mid + 1
+            else:
+                hi = mid - 1
+        return best
+
+    if B >= bs_sat:
+        # compute-saturated: batch growth buys nothing — fill *memory
+        # capacity* with the longest request that fits SLO + memory
+        best = max_len_under(1)
+        if best:
+            return LengthPreference(best, "longest")
+        return None
+
+    # not saturated: try to reach saturation within the SLO
+    need = bs_sat - B
+    if lat_with(1, need) <= slo and mem_ok(1, need):
+        best = max_len_under(need)
+        if best:
+            return LengthPreference(best, "bounded", count=need)
+    # cannot reach saturation: maximize batch size with the shortest requests
+    return LengthPreference(1, "shortest", count=max(need, 1))
+
+
+def select_for_migration(
+    candidates: Sequence[Request],
+    pref: LengthPreference,
+) -> list[Request]:
+    """Latency-relaxed side of the pull: pick the decoding offline requests
+    closest to the preference (paper: 'most closed to Pref')."""
+    if not candidates:
+        return []
+    ranked = sorted(candidates, key=lambda r: abs(r.context_len - pref.target_len))
+    if pref.mode == "longest":
+        # respect the upper bound strictly: never exceed target
+        ranked = [r for r in ranked if r.context_len <= pref.target_len] or ranked[:1]
+    return ranked[: pref.count]
+
+
+# ---------------------------------------------------------------------------
+# §3.4.1  Online preemption — eviction victim selection on strict nodes
+# ---------------------------------------------------------------------------
+
+def select_eviction_victims(
+    offline_running: Sequence[Request],
+    needed_tokens: int,
+    bottleneck: str,
+) -> list[Request]:
+    """Free >= needed_tokens of KV space for an incoming online request.
+
+    compute-bound node: evict FEW LONG requests (preserves decode batch
+    size, which is what compute efficiency depends on); otherwise evict
+    SHORT ones (cheap recompute). Paper §3.4.1."""
+    key = (lambda r: -r.context_len) if bottleneck == "compute" else (lambda r: r.context_len)
+    victims, freed = [], 0
+    for r in sorted(offline_running, key=key):
+        if freed >= needed_tokens:
+            break
+        victims.append(r)
+        freed += r.context_len
+    return victims if freed >= needed_tokens else list(offline_running)
+
+
+# ---------------------------------------------------------------------------
+# §3.4.2  Offline Request Gating (cost model)
+# ---------------------------------------------------------------------------
+
+def gating_decision(
+    candidate: Request,
+    current_offline_batch: Sequence[Request],
+    pm: PerfModel,
+    *,
+    evict_probability: float,
+    horizon_seconds: float,
+    mem_budget_bytes: float,
+) -> bool:
+    """Prefill a new offline request on a relaxed node only if the expected
+    throughput gain from the larger decode batch exceeds the expected
+    recompute cost from potential eviction."""
+    ctx = [r.context_len for r in current_offline_batch]
+    if pm.kv_bytes(ctx + [candidate.prompt_len]) > mem_budget_bytes:
+        return False
+    if not ctx:
+        return True  # idle node: always worth prefilling
+    lat_now = pm.decode_estimate(ctx).latency
+    lat_new = pm.decode_estimate(ctx + [candidate.prompt_len]).latency
+    rate_now = len(ctx) / lat_now
+    rate_new = (len(ctx) + 1) / lat_new
+    gain_tokens = max(rate_new - rate_now, 0.0) * horizon_seconds
+    prefill_s = pm.prefill_estimate([candidate.prompt_len]).latency
+    cost_tokens = evict_probability * prefill_s * rate_new
+    return gain_tokens > cost_tokens

@@ -1,0 +1,296 @@
+"""Serving engine: continuous batching + paged KV + layer-interruptible prefill.
+
+One ``ServingEngine`` is an xllm-instance analogue (DESIGN §3): it holds the
+model weights once and can run Prefill and/or Decode iterations. The paper's
+two mechanisms are implemented for real, not simulated:
+
+* **Layer-level interruption** (§3.4.1): prefill executes as a sequence of
+  per-layer jitted calls carrying the hidden state; between layers the engine
+  polls a preemption callback. An interrupted prefill keeps (hidden, layer
+  index, KV-so-far) and resumes exactly where it stopped — tests assert
+  bit-compatible logits vs an uninterrupted run.
+* **Mix decoding selection** (§3.4.4): each decode iteration builds its batch
+  with ``core.scheduling.mix_decoding_selection`` under the TPOT SLO using
+  the roofline perf model.
+
+Decode batches are padded to bucket sizes (TPU/XLA static shapes, DESIGN §3).
+Supported families here: dense + MoE with a single attention window (the
+cluster-scale behaviour of every family is exercised via the simulator).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.perf_model import PerfModel
+from repro.core.request import Kind, Phase, Request
+from repro.engine.kv_cache import PagedKVCache
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.models import attention, layers, moe as moe_lib
+from repro.models.config import ModelConfig
+from repro.models.transformer import Transformer, _norm
+
+
+@dataclass
+class PartialPrefill:
+    """State of a layer-interrupted prefill (resume token)."""
+    rid: int
+    x: jnp.ndarray            # hidden after `layer` layers, (1, S, d)
+    layer: int                # layers completed
+    tokens: np.ndarray
+
+
+@dataclass
+class EngineStats:
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    preemptions: int = 0
+    evictions: int = 0
+    decode_steps: int = 0
+    prefill_seconds: float = 0.0
+    decode_seconds: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, model: Transformer, params, *, num_pages: int = 512,
+                 page_size: int = 16, decode_buckets: tuple[int, ...] = (1, 2, 4, 8, 16, 32),
+                 perf_model: PerfModel | None = None):
+        cfg = model.cfg
+        assert not cfg.local_global and not cfg.sliding_window, \
+            "engine supports full-attention archs (cluster-scale behaviour of " \
+            "windowed/SSM families is exercised via the simulator)"
+        self.model = model
+        self.cfg = cfg
+        self.params = params
+        self.cache = PagedKVCache(cfg, num_pages, page_size)
+        self.decode_buckets = tuple(sorted(decode_buckets))
+        self.perf_model = perf_model
+        self.requests: dict[int, Request] = {}
+        self.token_buf: dict[int, list[int]] = {}   # prompt + generated tokens
+        self.partial: dict[int, PartialPrefill] = {}
+        self.stats = EngineStats()
+        self._layer_fn = self._build_layer_fn()
+        self._embed_fn = jax.jit(lambda p, t: model._embed(p, t))
+        self._logits_fn = jax.jit(lambda p, x: model._logits(p, x))
+        self._decode_fns: dict[tuple[int, int], Callable] = {}
+
+    # ------------------------------------------------------------------
+    # layer-interruptible prefill
+    # ------------------------------------------------------------------
+    def _build_layer_fn(self):
+        cfg = self.cfg
+        model = self.model
+
+        @jax.jit
+        def layer_fn(lp, x, positions):
+            h = _norm(cfg, lp["ln1"], x)
+            a, (k, v) = attention.attn_prefill(
+                lp["attn"], h, positions, cfg, window=cfg.sliding_window,
+                impl="xla")
+            if cfg.use_post_norm:
+                a = _norm(cfg, lp["post_ln1"], a)
+            x = x + a
+            h = _norm(cfg, lp["ln2"], x)
+            if cfg.is_moe:
+                m, _ = moe_lib.moe_mlp(lp["moe"], h, cfg, groups=1)
+            else:
+                m = layers.mlp(lp["mlp"], h, cfg.mlp_act)
+            if cfg.use_post_norm:
+                m = _norm(cfg, lp["post_ln2"], m)
+            return x + m, k, v
+
+        return layer_fn
+
+    def _layer_params(self, i: int):
+        return jax.tree.map(lambda a: a[i], self.params["layers"])
+
+    def add_request(self, req: Request, prompt_tokens: list[int]) -> None:
+        assert len(prompt_tokens) == req.prompt_len
+        self.requests[req.rid] = req
+        self.token_buf[req.rid] = list(prompt_tokens)
+
+    def prefill(self, rid: int, *, should_preempt: Callable[[], bool] | None = None,
+                max_new_pages: bool = True) -> str:
+        """Run (or resume) prefill for one request, checking the preemption
+        callback between transformer layers. Returns "done" | "preempted"."""
+        t0 = time.perf_counter()
+        req = self.requests[rid]
+        cfg = self.cfg
+        if rid in self.partial:
+            part = self.partial.pop(rid)
+            x, start_layer, tokens = part.x, part.layer, part.tokens
+        else:
+            tokens = np.asarray(self.token_buf[rid][: req.prompt_len], np.int32)
+            self.cache.ensure(rid, req.prompt_len)
+            x = self._embed_fn(self.params, jnp.asarray(tokens)[None])
+            start_layer = 0
+        S = tokens.shape[0]
+        positions = jnp.arange(S)[None]
+        req.phase = Phase.PREFILLING
+        for li in range(start_layer, cfg.num_layers):
+            x, k, v = self._layer_fn(self._layer_params(li), x, positions)
+            self.cache.write_prefill_layer(rid, li, k[0], v[0])
+            req.prefill_layers_done = li + 1
+            if should_preempt is not None and li < cfg.num_layers - 1 and should_preempt():
+                self.partial[rid] = PartialPrefill(rid, x, li + 1, tokens)
+                self.stats.preemptions += 1
+                self.stats.prefill_seconds += time.perf_counter() - t0
+                return "preempted"
+        # first token from the last hidden state
+        logits = self._logits_fn(self.params, x[:, -1])
+        nxt = int(jnp.argmax(logits, -1)[0])
+        self.token_buf[rid].append(nxt)
+        req.generated = 1
+        req.phase = Phase.DECODING
+        self.stats.prefill_tokens += S
+        self.stats.prefill_seconds += time.perf_counter() - t0
+        return "done"
+
+    def abort_prefill(self, rid: int) -> None:
+        """Discard partial prefill (offline request pushed back to queue)."""
+        self.partial.pop(rid, None)
+        self.cache.free(rid)
+        req = self.requests[rid]
+        req.recompute_tokens += req.prompt_len
+        req.prefill_layers_done = 0
+        req.phase = Phase.QUEUED
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        for b in self.decode_buckets:
+            if n <= b:
+                return b
+        return self.decode_buckets[-1]
+
+    def _decode_fn(self, bucket: int, pages: int):
+        key = (bucket, pages)
+        if key in self._decode_fns:
+            return self._decode_fns[key]
+        cfg = self.cfg
+        model = self.model
+
+        @jax.jit
+        def step(params, tokens, positions, tables, lengths, k_pool, v_pool):
+            x = model._embed(params, tokens[:, None])
+            hd = cfg.head_dim_
+
+            def body(x, inp):
+                lp, kp, vp = inp
+                h = _norm(cfg, lp["ln1"], x)
+                k_new, v_new = attention.project_kv_for_cache(lp["attn"], h, positions, cfg)
+                page_ids = jnp.take_along_axis(
+                    tables, (positions // self.cache.page_size)[:, None], axis=1)[:, 0]
+                offs = positions % self.cache.page_size
+                kp = kp.at[page_ids, offs].set(k_new[:, 0].astype(kp.dtype))
+                vp = vp.at[page_ids, offs].set(v_new[:, 0].astype(vp.dtype))
+                q = layers.dense(lp["attn"]["wq"], h[:, 0]).reshape(
+                    -1, cfg.num_heads, hd)
+                if cfg.qk_norm:
+                    q = layers.rmsnorm(lp["attn"]["q_norm"], q, cfg.norm_eps)
+                q = layers.apply_rope(q[:, None], positions[:, None], cfg.rope_theta)[:, 0]
+                a = paged_attention(q, kp, vp, tables, lengths,
+                                    num_kv_heads=cfg.num_kv_heads,
+                                    logit_softcap=cfg.attn_logit_softcap,
+                                    use_ref=True)
+                a = layers.dense(lp["attn"]["wo"], a.reshape(a.shape[0], 1, -1))
+                if cfg.use_post_norm:
+                    a = _norm(cfg, lp["post_ln1"], a)
+                x = x + a
+                h = _norm(cfg, lp["ln2"], x)
+                if cfg.is_moe:
+                    m, _ = moe_lib.moe_mlp(lp["moe"], h, cfg, groups=1)
+                else:
+                    m = layers.mlp(lp["mlp"], h, cfg.mlp_act)
+                if cfg.use_post_norm:
+                    m = _norm(cfg, lp["post_ln2"], m)
+                return x + m, (kp, vp)
+
+            x, (k_pool, v_pool) = jax.lax.scan(body, x, (params["layers"], k_pool, v_pool))
+            logits = model._logits(params, x[:, 0])
+            return logits, k_pool, v_pool
+
+        self._decode_fns[key] = step
+        return step
+
+    def decode_step(self, rids: list[int]) -> dict[int, int]:
+        """One continuous-batching decode iteration for the given requests.
+        Returns rid -> new token."""
+        if not rids:
+            return {}
+        t0 = time.perf_counter()
+        B = len(rids)
+        bucket = self._bucket(B)
+        rids = rids[:bucket]
+        B = len(rids)
+        for r in rids:
+            req = self.requests[r]
+            self.cache.ensure(r, req.context_len)
+        pages = max(len(self.cache.tables[r]) for r in rids)
+        # pad the page dimension to a small set of sizes to bound compilations
+        pages = 1 << (pages - 1).bit_length()
+        tables = self.cache.batch_tables(rids, pad_to=pages)
+        # the input token is the last one in the buffer; its position is
+        # context_len - 1 and the cache covers [0, context_len) after writing
+        positions = np.array([self.requests[r].context_len - 1 for r in rids], np.int32)
+        tokens = np.array([self.token_buf[r][pos] for r, pos in zip(rids, positions)],
+                          np.int32)
+        lengths = positions + 1
+        pad = bucket - B
+        if pad:
+            tables = np.pad(tables, ((0, pad), (0, 0)))
+            positions = np.pad(positions, (0, pad))
+            tokens = np.pad(tokens, (0, pad))
+            lengths = np.pad(lengths, (0, pad), constant_values=1)
+        fn = self._decode_fn(bucket, pages)
+        logits, self.cache.k_pool, self.cache.v_pool = fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(tables), jnp.asarray(lengths),
+            self.cache.k_pool, self.cache.v_pool)
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        out = {}
+        dt = time.perf_counter() - t0
+        for i, r in enumerate(rids):
+            req = self.requests[r]
+            tok = int(nxt[i])
+            self.token_buf[r].append(tok)
+            req.generated += 1
+            req.decode_time_sum += dt
+            out[r] = tok
+            if req.done:
+                req.phase = Phase.FINISHED
+                self.cache.free(r)
+        self.stats.decode_tokens += B
+        self.stats.decode_steps += 1
+        self.stats.decode_seconds += dt
+        return out
+
+    # ------------------------------------------------------------------
+    def evict(self, rid: int) -> None:
+        """Evict a decoding request (offline victim): free pages; it must
+        re-prefill (recompute) later."""
+        req = self.requests[rid]
+        req.recompute_tokens += req.context_len
+        req.evictions += 1
+        req.phase = Phase.EVICTED
+        self.cache.free(rid)
+        self.stats.evictions += 1
+
+    def migrate_out(self, rid: int):
+        """Export KV for migration to another engine (RDMA->ICI analogue)."""
+        k, v, n = self.cache.export_request(rid)
+        self.cache.free(rid)
+        return k, v, n
+
+    def migrate_in(self, rid: int, req: Request, tokens: list[int], k, v, n: int) -> None:
+        self.requests[rid] = req
+        self.token_buf[rid] = list(tokens)
+        self.cache.import_request(rid, k, v, n)
+        req.phase = Phase.DECODING

@@ -1,0 +1,126 @@
+"""Paged KV cache: block allocator + JAX page pools (vLLM-style, §2.1).
+
+The pool is a pair of (L, num_pages, page_size, Hkv, hd) arrays; per-request
+page lists (block tables) live Python-side in the engine. Non-contiguous
+paging is what makes continuous batching + preemption cheap: evicting a
+request is just returning its pages to the free list.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+class OutOfPagesError(RuntimeError):
+    pass
+
+
+class BlockAllocator:
+    def __init__(self, num_pages: int, reserved: int = 0):
+        """``reserved`` low pages are never handed out — page 0 serves as the
+        trash page that padded decode-batch rows scatter into."""
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, reserved - 1, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise OutOfPagesError(f"need {n} pages, {len(self._free)} free")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: list[int]) -> None:
+        self._free.extend(pages)
+
+
+@dataclass
+class PagedKVCache:
+    cfg: ModelConfig
+    num_pages: int
+    page_size: int = 16
+    k_pool: jnp.ndarray = field(init=False)
+    v_pool: jnp.ndarray = field(init=False)
+    allocator: BlockAllocator = field(init=False)
+    tables: dict[int, list[int]] = field(default_factory=dict)
+    lengths: dict[int, int] = field(default_factory=dict)
+
+    def __post_init__(self):
+        cfg = self.cfg
+        shape = (cfg.num_layers, self.num_pages, self.page_size,
+                 cfg.num_kv_heads, cfg.head_dim_)
+        self.k_pool = jnp.zeros(shape, cfg.jnp_dtype)
+        self.v_pool = jnp.zeros(shape, cfg.jnp_dtype)
+        self.allocator = BlockAllocator(self.num_pages, reserved=1)
+
+    # ------------------------------------------------------------------
+    def pages_for(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    def ensure(self, rid: int, target_len: int) -> None:
+        """Grow rid's block table to cover target_len tokens."""
+        table = self.tables.setdefault(rid, [])
+        need = self.pages_for(target_len) - len(table)
+        if need > 0:
+            table.extend(self.allocator.alloc(need))
+        self.lengths[rid] = target_len
+
+    def free(self, rid: int) -> int:
+        """Release all pages of a request (completion or eviction)."""
+        pages = self.tables.pop(rid, [])
+        self.allocator.free(pages)
+        return self.lengths.pop(rid, 0)
+
+    def can_fit(self, tokens: int) -> bool:
+        return self.pages_for(tokens) <= self.allocator.free_pages
+
+    # ------------------------------------------------------------------
+    def write_prefill_layer(self, rid: int, layer: int, k, v) -> None:
+        """Scatter one layer's prefill K/V (S, Hkv, hd) into the pool."""
+        S = k.shape[0]
+        table = np.asarray(self.tables[rid], np.int32)
+        pos = np.arange(S)
+        page_ids = table[pos // self.page_size]
+        offs = pos % self.page_size
+        self.k_pool = self.k_pool.at[layer, page_ids, offs].set(
+            k.astype(self.k_pool.dtype))
+        self.v_pool = self.v_pool.at[layer, page_ids, offs].set(
+            v.astype(self.v_pool.dtype))
+
+    def batch_tables(self, rids: list[int], pad_to: int | None = None) -> np.ndarray:
+        """Dense (B, P) int32 table for a decode batch (padded with page 0 —
+        masked out by lengths in the attention)."""
+        P = pad_to or max(len(self.tables[r]) for r in rids)
+        out = np.zeros((len(rids), P), np.int32)
+        for i, r in enumerate(rids):
+            t = self.tables[r]
+            out[i, : len(t)] = t
+        return out
+
+    def export_request(self, rid: int) -> tuple[np.ndarray, np.ndarray, int]:
+        """Gather a request's KV (for migration): (L, S, Hkv, hd) x2 + len."""
+        table = np.asarray(self.tables[rid], np.int32)
+        L = self.cfg.num_layers
+        k = np.asarray(self.k_pool[:, table]).reshape(
+            L, -1, self.cfg.num_kv_heads, self.cfg.head_dim_)
+        v = np.asarray(self.v_pool[:, table]).reshape(
+            L, -1, self.cfg.num_kv_heads, self.cfg.head_dim_)
+        n = self.lengths[rid]
+        return k[:, :n], v[:, :n], n
+
+    def import_request(self, rid: int, k, v, n: int) -> None:
+        """Write migrated KV (L, n, Hkv, hd) into freshly allocated pages."""
+        self.ensure(rid, n)
+        table = np.asarray(self.tables[rid], np.int32)
+        pos = np.arange(n)
+        page_ids = table[pos // self.page_size]
+        offs = pos % self.page_size
+        self.k_pool = self.k_pool.at[:, page_ids, offs].set(
+            jnp.asarray(k, self.k_pool.dtype))
+        self.v_pool = self.v_pool.at[:, page_ids, offs].set(
+            jnp.asarray(v, self.v_pool.dtype))

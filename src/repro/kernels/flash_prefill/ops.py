@@ -1,0 +1,55 @@
+"""Jit'd public wrapper for the flash prefill kernel.
+
+Accepts model-layout tensors (B, S, H, hd), pads sequence dims to block
+multiples and head_dim to 128 (MXU alignment), and dispatches to the Pallas
+kernel (TPU / interpret) or the jnp oracle (CPU fallback for the engine).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_prefill.kernel import flash_prefill_pallas
+from repro.kernels.flash_prefill.ref import flash_prefill_ref
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "logit_softcap", "interpret",
+                     "block_q", "block_kv", "use_ref"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    logit_softcap: float = 0.0, kv_lens=None,
+                    interpret: bool = False, block_q: int = 128,
+                    block_kv: int = 128, use_ref: bool = False):
+    """q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd) -> (B, Sq, Hq, hd).
+
+    kv_lens: (B,) valid kv length per row — the Pallas kernel takes a single
+    static kv_len, so variable rows fall back to per-row max (mask exactness
+    is preserved through the padding mask only for uniform rows; the engine
+    prefills uniform buckets).
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    qt = _pad_to(_pad_to(q.transpose(0, 2, 1, 3), 2, block_q), 3, 128)
+    kt = _pad_to(_pad_to(k.transpose(0, 2, 1, 3), 2, block_kv), 3, 128)
+    vt = _pad_to(_pad_to(v.transpose(0, 2, 1, 3), 2, block_kv), 3, 128)
+    fn = flash_prefill_ref if use_ref else functools.partial(
+        flash_prefill_pallas, block_q=block_q, block_kv=block_kv,
+        interpret=interpret)
+    o = fn(qt, kt, vt, kv_len=Skv, causal=causal, window=window,
+           logit_softcap=logit_softcap, scale=scale)
+    return o[:, :, :Sq, :hd].transpose(0, 2, 1, 3)

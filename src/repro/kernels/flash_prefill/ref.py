@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash prefill kernel (naive full-score attention)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_prefill_ref(q, k, v, *, kv_len: int, q_offset: int = 0,
+                      causal: bool = True, window: int = 0,
+                      logit_softcap: float = 0.0, scale: float | None = None):
+    """q: (B, Hq, Sq, hd); k, v: (B, Hkv, Skv, hd). Returns (B, Hq, Sq, hd)."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Hkv, G, Sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, k.astype(jnp.float32)) * scale
+    if logit_softcap:
+        s = jnp.tanh(s / logit_softcap) * logit_softcap
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = k_pos < kv_len
+    if causal:
+        rel = q_pos - k_pos
+        mask = mask & (rel >= 0)
+        if window:
+            mask = mask & (rel < window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgqc,bkcd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, hd).astype(q.dtype)

@@ -1,0 +1,193 @@
+"""Post-compile HLO analysis for the roofline report.
+
+XLA's ``cost_analysis()`` counts while-loop (lax.scan) bodies ONCE, so a
+scan-over-layers model under-reports FLOPs/bytes by ~num_layers x. This
+module walks the *partitioned* HLO text (per-device shapes), multiplies
+while bodies by their parsed trip counts, and extracts:
+
+  * dot FLOPs (2 * prod(result) * prod(contracting dims)) — the MXU work;
+  * collective bytes by op kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), summed over result sizes.
+
+Trip counts are read from the while condition's compare-to-constant pattern
+(the form lax.scan emits); unparseable conditions fall back to 1 and are
+reported so the analytic cross-check (perf model) can flag the gap.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+) (?:\([^)]*\) -> .*?)?\{?\s*$")
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of 'bf16[8,128,256]' (tuples handled by caller)."""
+    m = _SHAPE_RE.match(type_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _all_shapes_bytes(segment: str) -> int:
+    return sum(_shape_bytes(m.group(0)) for m in _SHAPE_RE.finditer(segment))
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list[str] = field(default_factory=list)
+
+
+def _split_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not line.startswith(" ") and ("{" in line) and ("->" in line or line.startswith(("ENTRY", "%"))):
+            name = line.split()[0].lstrip("%")
+            if name == "ENTRY":
+                name = line.split()[1].lstrip("%")
+            cur = Computation(name)
+            comps[cur.name] = cur
+        elif cur is not None:
+            if stripped == "}":
+                cur = None
+            else:
+                cur.lines.append(stripped)
+    return comps
+
+
+_CALLEE_RE = re.compile(
+    r"(?:body|condition|to_apply|called_computations|calls)=\{?%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"= s32\[\] constant\((\d+)\)")
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest s32 constant in the condition ≈ trip count (lax.scan form)."""
+    best = 1
+    for line in cond.lines:
+        for m in _CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_DOT_RE = re.compile(
+    r"= (\w+\[[\d,]*\])\S* dot\(.*?lhs_contracting_dims=\{([\d,]*)\}")
+_DOT_OPERAND_RE = re.compile(r"dot\(\s*%?([\w\.\-]+)\s*[,)]")
+
+
+def analyze(hlo: str) -> dict:
+    comps = _split_computations(hlo)
+    # entry: prefer the "main*" computation, else the one never called
+    entry = next((n for n in comps if n.startswith("main")), None)
+    if entry is None:
+        referenced = set()
+        for c in comps.values():
+            for line in c.lines:
+                for m in _CALLEE_RE.finditer(line):
+                    referenced.add(m.group(1))
+        entries = [n for n in comps if n not in referenced]
+        entry = entries[-1] if entries else next(iter(comps), None)
+
+    def comp_cost(name: str, memo: dict) -> dict:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        out = {"dot_flops": 0.0, "collectives": defaultdict(float), "unparsed_while": 0}
+        if c is None:
+            memo[name] = out
+            return out
+        # instruction result types for operand-shape lookup
+        result_types: dict[str, str] = {}
+        for line in c.lines:
+            mm = re.match(r"%?([\w\.\-]+) = (\([^)]*\)|\w+\[[\d,]*\]\S*)", line)
+            if mm:
+                result_types[mm.group(1)] = mm.group(2)
+        for line in c.lines:
+            # dots
+            md = _DOT_RE.search(line)
+            if md and " dot(" in line:
+                res_bytes_shape = md.group(1)
+                m_res = _SHAPE_RE.match(res_bytes_shape)
+                prod_res = 1
+                for d in m_res.group(2).split(","):
+                    if d:
+                        prod_res *= int(d)
+                # contracting dim sizes from the lhs operand's type
+                k = 1
+                mo = _DOT_OPERAND_RE.search(line)
+                if mo:
+                    lhs = mo.group(1).lstrip("%")
+                    t = result_types.get(lhs)
+                    if t:
+                        ms = _SHAPE_RE.match(t)
+                        if ms:
+                            dims = [int(x) for x in ms.group(2).split(",") if x]
+                            for ci in md.group(2).split(","):
+                                if ci and int(ci) < len(dims):
+                                    k *= dims[int(ci)]
+                out["dot_flops"] += 2.0 * prod_res * k
+                continue
+            # collectives
+            for kind in COLLECTIVES:
+                if f" {kind}(" in line or f" {kind}-start(" in line:
+                    head = line.split("=", 1)[0] + "= " + line.split("=", 1)[1]
+                    res_t = line.split("=", 1)[1].strip().split(" ")[0]
+                    out["collectives"][kind] += _all_shapes_bytes(res_t)
+                    break
+            # nested calls
+            if " while(" in line:
+                mb = re.search(r"body=\{?%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=\{?%?([\w\.\-]+)", line)
+                body = mb.group(1) if mb else None
+                cond = mc.group(1) if mc else None
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                if trips <= 1:
+                    out["unparsed_while"] += 1
+                sub = comp_cost(body, memo) if body else {"dot_flops": 0,
+                                                          "collectives": {}}
+                out["dot_flops"] += trips * sub["dot_flops"]
+                for k2, v in sub["collectives"].items():
+                    out["collectives"][k2] += trips * v
+                out["unparsed_while"] += trips * sub.get("unparsed_while", 0)
+            else:
+                for m in re.finditer(
+                        r"(?:to_apply|called_computations|calls)=\{?%?([\w\.\-]+)",
+                        line):
+                    callee = m.group(1)
+                    if callee in comps:
+                        sub = comp_cost(callee, memo)
+                        out["dot_flops"] += sub["dot_flops"]
+                        for k2, v in sub["collectives"].items():
+                            out["collectives"][k2] += v
+                        out["unparsed_while"] += sub.get("unparsed_while", 0)
+        memo[name] = out
+        return out
+
+    memo: dict = {}
+    res = comp_cost(entry, memo)
+    total_coll = sum(res["collectives"].values())
+    return {
+        "entry": entry,
+        "dot_flops_per_device": res["dot_flops"],
+        "collective_bytes_per_device": total_coll,
+        "collective_breakdown": dict(res["collectives"]),
+        "unparsed_whiles": res["unparsed_while"],
+    }

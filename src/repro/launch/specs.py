@@ -1,0 +1,63 @@
+"""ShapeDtypeStruct stand-ins for every workload input (no allocation).
+
+``input_specs(cfg, shape)`` returns the abstract batch for a workload shape;
+``abstract_state(...)`` builds abstract params / optimizer / cache pytrees.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import AUDIO, VLM, InputShape, ModelConfig
+from repro.training.optimizer import init_opt_state
+
+TOKENS = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Abstract input batch for (arch, workload shape).
+
+    VLM: image patch tokens are part of the sequence budget, so text tokens
+    = seq_len - num_frontend_tokens. Audio: seq_len maps to encoder frames
+    (the stubbed conv frontend's output), decoder prompt is small.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.jnp_dtype
+    if shape.kind == "decode":
+        return {"tokens": _sds((B,), TOKENS)}
+    if cfg.family == VLM:
+        T = cfg.num_frontend_tokens
+        batch = {"tokens": _sds((B, S - T), TOKENS),
+                 "frontend_embeds": _sds((B, T, cfg.d_model), d)}
+    elif cfg.family == AUDIO:
+        dec = 64 if shape.kind == "train" else 8
+        batch = {"tokens": _sds((B, dec), TOKENS),
+                 "frontend_embeds": _sds((B, S, cfg.d_model), d)}
+    else:
+        batch = {"tokens": _sds((B, S), TOKENS)}
+    if shape.kind == "train":
+        batch["labels"] = _sds(batch["tokens"].shape, TOKENS)
+    return batch
+
+
+def abstract_params(model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(params_abs):
+    return jax.eval_shape(init_opt_state, params_abs)
+
+
+def abstract_cache(model, shape: InputShape):
+    cfg = model.cfg
+    kw = {}
+    if cfg.family == AUDIO:
+        kw["enc_len"] = 1500
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 prefilled_len=shape.seq_len - 1, **kw))

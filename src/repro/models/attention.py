@@ -1,0 +1,298 @@
+"""Attention: flash-style blockwise XLA implementation + decode-with-cache.
+
+The XLA path is the default everywhere (it lowers on any backend and is what
+the multi-pod dry-run compiles). The Pallas kernels in ``repro.kernels``
+implement the same block structure with explicit VMEM BlockSpecs for the TPU
+target and are validated against ``repro.kernels.*.ref`` in interpret mode.
+
+Supports: GQA, sliding windows (ring-buffer caches), gemma2 logit softcap,
+qwen3 qk-norm, qwen2.5 QKV bias.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.sharding.ctx import constrain
+
+NEG_INF = -1e30
+
+
+def init_attn(rng, cfg: ModelConfig, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    hd = cfg.head_dim_
+    ks = jax.random.split(rng, 4)
+    dt = cfg.jnp_dtype
+    p = {
+        "wq": layers.init_dense(ks[0], d, cfg.num_heads * hd, dt, bias=cfg.attn_bias),
+        "wk": layers.init_dense(ks[1], d, cfg.num_kv_heads * hd, dt, bias=cfg.attn_bias),
+        "wv": layers.init_dense(ks[2], d, cfg.num_kv_heads * hd, dt, bias=cfg.attn_bias),
+        "wo": layers.init_dense(ks[3], cfg.num_heads * hd, d, dt,
+                                scale=0.02 / np.sqrt(2 * max(cfg.num_layers, 1))),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rmsnorm(hd, dt)
+        p["k_norm"] = layers.init_rmsnorm(hd, dt)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, rope: bool = True):
+    """x (B,S,d); positions (B,S). Returns q (B,S,Hq,hd), k/v (B,S,Hkv,hd)."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    q = layers.dense(p["wq"], x).reshape(B, S, cfg.num_heads, hd)
+    k = layers.dense(p["wk"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    v = layers.dense(p["wv"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Blockwise ("flash") attention, pure XLA
+# ---------------------------------------------------------------------------
+
+class _Carry(NamedTuple):
+    m: jax.Array    # (B, Hkv, G, Sq) running max, f32
+    l: jax.Array    # (B, Hkv, G, Sq) running denominator, f32
+    acc: jax.Array  # (B, Hkv, G, Sq, hd) running numerator, f32
+
+
+def flash_attention_xla(
+    q, k, v, *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset=0,
+    kv_lens=None,
+    logit_softcap: float = 0.0,
+    kv_block: int = 512,
+    scale: float | None = None,
+):
+    """Online-softmax attention over KV blocks; never materializes (Sq, Skv).
+
+    q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd) with Hq % Hkv == 0 (GQA).
+    q_offset: scalar or (B,) absolute position of q[;, 0] (prefill chunking /
+    decode). kv_lens: (B,) valid KV length (padding mask). window: 0 = full.
+    Returns (B, Sq, Hq, hd) in q.dtype.
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+
+    nblk = -(-Skv // kv_block)
+    pad = nblk * kv_block - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if kv_lens is None:
+        kv_lens = jnp.full((B,), Skv, jnp.int32)
+
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    q_pos = jnp.asarray(q_offset)[..., None] + jnp.arange(Sq)  # (B?, Sq)
+    q_pos = jnp.broadcast_to(q_pos, (B, Sq))
+
+    kb = k.reshape(B, nblk, kv_block, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, kv_block, Hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry: _Carry, blk):
+        kblk, vblk, blk_idx = blk  # (B, kv_block, Hkv, hd)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(jnp.float32),
+                       kblk.astype(jnp.float32)) * scale
+        if logit_softcap:
+            s = layers.softcap(s, logit_softcap)
+        k_pos = blk_idx * kv_block + jnp.arange(kv_block)  # (kv_block,)
+        valid = k_pos[None, :] < kv_lens[:, None]  # (B, c)
+        mask = valid[:, None, None, None, :]
+        if causal:
+            rel = q_pos[:, :, None] - k_pos[None, None, :]  # (B, Sq, c)
+            cm = rel >= 0
+            if window:
+                cm &= rel < window
+            mask = mask & cm[:, None, None, :, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(carry.m, s.max(axis=-1))
+        alpha = jnp.exp(carry.m - m_new)
+        p_ = jnp.exp(s - m_new[..., None])
+        l_new = carry.l * alpha + p_.sum(axis=-1)
+        acc = carry.acc * alpha[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p_, vblk.astype(jnp.float32))
+        return _Carry(m_new, l_new, acc), None
+
+    init = _Carry(
+        m=jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32),
+        l=jnp.zeros((B, Hkv, G, Sq), jnp.float32),
+        acc=jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32),
+    )
+    carry, _ = jax.lax.scan(body, init, (kb, vb, jnp.arange(nblk)))
+    out = carry.acc / jnp.maximum(carry.l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, hd)
+    return out.astype(q.dtype)
+
+
+def naive_attention_xla(q, k, v, *, causal=True, window: int = 0, kv_lens=None,
+                        logit_softcap: float = 0.0, scale=None):
+    """Full-score attention (materializes (Sq, Skv)). Used for *training* at
+    moderate sequence lengths: XLA's backward through the flash scan saves
+    per-block softmax intermediates (O(nblocks * Sq * block) — worse than the
+    full score matrix at 4k), while the naive path keeps exactly one score
+    tensor. Serving prefill (no grad) uses the flash path."""
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if logit_softcap:
+        s = layers.softcap(s, logit_softcap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        rel = q_pos - k_pos
+        mask = rel >= 0
+        if window:
+            mask &= rel < window
+    mask = jnp.broadcast_to(mask[None], (B, Sq, Skv))
+    if kv_lens is not None:
+        mask = mask & (k_pos[None] < kv_lens[:, None, None])
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def decode_attention_xla(q, k_cache, v_cache, lengths, *,
+                         logit_softcap: float = 0.0, scale: float | None = None):
+    """Single-token decode attention over a (possibly ring-buffer) cache.
+
+    q: (B, Hq, hd); caches: (B, C, Hkv, hd); lengths: (B,) tokens written so
+    far (including the current one). Valid slots = min(lengths, C) — with a
+    ring buffer the whole cache is valid once wrapped, and softmax order-
+    invariance makes slot permutation irrelevant.
+    """
+    B, Hq, hd = q.shape
+    C, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k_cache.astype(jnp.float32)) * scale
+    if logit_softcap:
+        s = layers.softcap(s, logit_softcap)
+    valid = jnp.arange(C)[None, :] < jnp.minimum(lengths, C)[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention sub-layer (projections + rope + core + out-proj)
+# ---------------------------------------------------------------------------
+
+def attn_prefill(p, x, positions, cfg: ModelConfig, *, window: int = 0,
+                 causal: bool = True, kv_lens=None, impl: str = "xla",
+                 cross_kv=None):
+    """Returns (out (B,S,d), (k, v) post-rope for caching)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions, rope=not cfg.is_encoder_decoder)
+    if cross_kv is not None:
+        k, v = cross_kv
+        causal = False
+    # sequence-sharded attention for head counts that do not divide the TP
+    # axis (40H/8H/24H/6H vs 16-wide "model"): without this, GSPMD re-reduces
+    # score tensors inside every flash kv-block step (observed 2.9 TB/dev of
+    # all-reduce on qwen2.5-32b prefill_32k — EXPERIMENTS.md §Perf). The
+    # launcher activates these keys only for non-divisible-head archs.
+    q = constrain(q, "attn_q_seq")
+    k = constrain(k, "attn_kv_rep")
+    v = constrain(v, "attn_kv_rep")
+    if impl == "pallas" or impl == "pallas_interpret":
+        from repro.kernels.flash_prefill import ops as fp_ops
+        out = fp_ops.flash_attention(
+            q, k, v, causal=causal, window=window,
+            logit_softcap=cfg.attn_logit_softcap, kv_lens=kv_lens,
+            interpret=(impl == "pallas_interpret"))
+    elif impl == "xla_naive":
+        out = naive_attention_xla(
+            q, k, v, causal=causal, window=window, kv_lens=kv_lens,
+            logit_softcap=cfg.attn_logit_softcap)
+    else:
+        out = flash_attention_xla(
+            q, k, v, causal=causal, window=window, kv_lens=kv_lens,
+            logit_softcap=cfg.attn_logit_softcap)
+    # Optional Megatron-SP reshard before the output projection. Measured on
+    # qwen2.5-32b prefill_32k it REGRESSED 5.16s -> 6.29s of collectives:
+    # the per-layer weight gathers it avoids (~1 GB/layer) are cheaper than
+    # the activation all-reduces it introduces (~2.7 GB/layer) at this B*S.
+    # Kept opt-in for smaller-batch regimes (EXPERIMENTS.md §Perf, refuted).
+    out = constrain(out, "attn_out_rep")
+    out = layers.dense(p["wo"], out.reshape(B, S, -1))
+    return out, (k, v)
+
+
+def attn_decode(p, x, cache_k, cache_v, positions, lengths, cfg: ModelConfig,
+                *, impl: str = "xla"):
+    """x (B,1,d); caches (B,C,Hkv,hd) ALREADY containing the current token's
+    k/v (caller writes before calling, so cache layout stays caller-owned).
+    positions (B,) absolute position of the current token.
+    """
+    B = x.shape[0]
+    q, _, _ = _project_qkv(p, x, cfg, positions[:, None], rope=not cfg.is_encoder_decoder)
+    q = q[:, 0]  # (B, Hq, hd)
+    # decode-side analogue: with non-divisible heads, keep q replicated over
+    # "model" so the attention over the seq-sharded cache stays local + a
+    # small partial-softmax all-reduce (instead of gathering the cache)
+    q = constrain(q, "attn_q_dec")
+    out = decode_attention_xla(q, cache_k, cache_v, lengths,
+                               logit_softcap=cfg.attn_logit_softcap)
+    return layers.dense(p["wo"], out.reshape(B, 1, -1))
+
+
+def project_kv_for_cache(p, x, positions, cfg: ModelConfig):
+    """k, v (post-rope) for the current decode token: (B, 1, Hkv, hd)."""
+    _, k, v = _project_qkv(p, x, cfg, positions[:, None], rope=not cfg.is_encoder_decoder)
+    return k, v
+
+
+def write_decode_cache(cache_k, cache_v, k_new, v_new, positions):
+    """Scatter one token per request into a (ring-buffer) cache.
+
+    caches (B,C,Hkv,hd); k_new/v_new (B,1,Hkv,hd); positions (B,) absolute.
+    Slot = position % C (ring buffer ≡ plain cache when C >= max_seq).
+    """
+    B, C = cache_k.shape[0], cache_k.shape[1]
+    slot = (positions % C).astype(jnp.int32)
+    idx = jnp.arange(B)
+    cache_k = cache_k.at[idx, slot].set(k_new[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[idx, slot].set(v_new[:, 0].astype(cache_v.dtype))
+    return cache_k, cache_v
+
+
+def write_prefill_cache(k, v, cache_size: int, dtype=None):
+    """Build a decode cache from prefill K/V (B,S,Hkv,hd), keeping the last
+    ``cache_size`` tokens at ring slots pos %% cache_size."""
+    B, S, Hkv, hd = k.shape
+    dtype = dtype or k.dtype
+    if S <= cache_size:
+        pad = cache_size - S
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
+        return ck, cv
+    # keep last cache_size tokens; place token at absolute pos p in slot p % C
+    tail_k, tail_v = k[:, -cache_size:], v[:, -cache_size:]
+    start = S - cache_size
+    slots = (start + jnp.arange(cache_size)) % cache_size
+    order = jnp.argsort(slots)
+    return tail_k[:, order].astype(dtype), tail_v[:, order].astype(dtype)

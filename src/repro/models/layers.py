@@ -1,0 +1,119 @@
+"""Shared neural-net building blocks (functional, params-as-pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_dense(rng, d_in: int, d_out: int, dtype, scale: float = 0.02, bias: bool = False):
+    w = jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def init_layernorm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, hd/2)
+    ang = ang[..., None, :]  # broadcast over heads
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(num_pos: int, d_model: int) -> np.ndarray:
+    """Whisper-style sinusoidal embeddings."""
+    log_timescale = np.log(10000.0) / (d_model // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(d_model // 2))
+    t = np.arange(num_pos)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(t), np.cos(t)], axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d_model: int, d_ff: int, dtype, act: str = "silu"):
+    ks = jax.random.split(rng, 3)
+    if act == "gelu_mlp":  # plain 2-matrix MLP (whisper)
+        return {
+            "up": init_dense(ks[0], d_model, d_ff, dtype, bias=True),
+            "down": init_dense(ks[1], d_ff, d_model, dtype, bias=True),
+        }
+    return {  # gated (swiglu / geglu)
+        "gate": init_dense(ks[0], d_model, d_ff, dtype),
+        "up": init_dense(ks[1], d_model, d_ff, dtype),
+        "down": init_dense(ks[2], d_ff, d_model, dtype, scale=0.02 / np.sqrt(2)),
+    }
+
+
+def mlp(p, x, act: str = "silu"):
+    if "gate" not in p:
+        return dense(p["down"], jax.nn.gelu(dense(p["up"], x)))
+    a = dense(p["gate"], x)
+    a = jax.nn.silu(a) if act == "silu" else jax.nn.gelu(a)
+    return dense(p["down"], a * dense(p["up"], x))
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """logits (..., V) any dtype; computed in f32. labels int32, -1 = ignore."""
+    logits = logits.astype(jnp.float32)
+    valid = (labels >= 0) if mask is None else mask
+    labels = jnp.maximum(labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0] - logz
+    valid = valid.astype(jnp.float32)
+    return -(ll * valid).sum() / jnp.maximum(valid.sum(), 1.0)

@@ -1,0 +1,183 @@
+"""Mamba2 (SSD) block — chunked prefill/train + O(1) decode step.
+
+Follows the scalar-A-per-head SSD formulation (Dao & Gu, 2024): within a
+chunk the output is computed with an attention-like quadratic einsum over
+the chunk, and chunk-boundary states are carried by a short lax.scan. This
+keeps train-time scan carries to S/chunk states instead of S (critical for
+the train_4k shape) and maps onto the MXU as batched GEMMs.
+
+Decode carries (conv_state, ssm_state) — constant in sequence length, which
+is exactly why zamba2/rwkv-class models run the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+def init_mamba(rng, cfg: ModelConfig):
+    d, di, ns = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    nh = cfg.ssm_nheads
+    dt_ = cfg.jnp_dtype
+    ks = jax.random.split(rng, 3)
+    d_in_proj = 2 * di + 2 * ns + nh  # z, x, B, C, dt
+    conv_dim = di + 2 * ns
+    a_init = jnp.log(jnp.linspace(1.0, 16.0, nh))
+    dt_bias = jnp.log(jnp.exp(jnp.linspace(1e-3, 1e-1, nh)) - 1.0)  # softplus^-1
+    return {
+        "in_proj": layers.init_dense(ks[0], d, d_in_proj, dt_),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32) * 0.02).astype(dt_),
+        "conv_b": jnp.zeros((conv_dim,), dt_),
+        "A_log": a_init.astype(jnp.float32),     # A = -exp(A_log), per head
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "out_proj": layers.init_dense(ks[2], di, d, dt_, scale=0.02 / np.sqrt(2 * cfg.num_layers)),
+        "norm": layers.init_rmsnorm(di, dt_),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * ns], axis=-1)
+    return z, xbc, dt  # xbc holds x|B|C for the conv
+
+
+def _split_xbc(cfg: ModelConfig, xbc):
+    di, ns = cfg.ssm_d_inner, cfg.ssm_state
+    x, B, C = jnp.split(xbc, [di, di + ns], axis=-1)
+    return x, B, C
+
+
+def mamba_prefill(p, u, cfg: ModelConfig, conv_state=None, ssm_state=None,
+                  mask=None):
+    """u: (B, S, d) -> (y (B,S,d), (conv_state, ssm_state)).
+
+    S is padded internally to a multiple of cfg.ssm_chunk. ``mask`` (B,S)
+    marks valid tokens: invalid tokens get dt=0 which makes them state-
+    transparent (decay exp(0)=1, contribution dt·B·x=0), so trailing padding
+    never corrupts the carried recurrent state.
+    """
+    Bsz, S_in, _ = u.shape
+    Q = min(cfg.ssm_chunk, max(S_in, 1))
+    pad_len = (-S_in) % Q
+    if pad_len:
+        u = jnp.pad(u, ((0, 0), (0, pad_len), (0, 0)))
+        if mask is None:
+            mask = jnp.arange(S_in + pad_len)[None, :] < S_in
+        else:
+            mask = jnp.pad(mask, ((0, 0), (0, pad_len)))
+    Bsz, S, _ = u.shape
+    nh, hd, ns = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    di = cfg.ssm_d_inner
+
+    zxbcdt = layers.dense(p["in_proj"], u)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+
+    # causal depthwise conv over the sequence, seeded from conv_state
+    K = cfg.ssm_conv
+    if conv_state is None:
+        conv_state = jnp.zeros((Bsz, K - 1, xbc.shape[-1]), xbc.dtype)
+    xbc_pad = jnp.concatenate([conv_state, xbc], axis=1)
+    # conv state = taps preceding the first *unseen* position (ignores padding)
+    new_conv_state = xbc_pad[:, S_in:S_in + K - 1, :]
+    xbc_conv = sum(xbc_pad[:, i:i + S, :] * p["conv_w"][i] for i in range(K))
+    xbc_conv = jax.nn.silu(xbc_conv + p["conv_b"])
+    x, Bm, Cm = _split_xbc(cfg, xbc_conv)
+
+    x = x.reshape(Bsz, S, nh, hd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])      # (B,S,nh)
+    if mask is not None:
+        dt = dt * mask[:, :, None].astype(jnp.float32)  # padding: state-transparent
+    A = -jnp.exp(p["A_log"])                                             # (nh,)
+    dA = dt * A                                                          # (B,S,nh) log-decay
+    Bm = Bm.astype(jnp.float32)  # (B,S,ns) — ngroups=1, shared across heads
+    Cm = Cm.astype(jnp.float32)
+
+    nchunk = S // Q
+    xc = x.reshape(Bsz, nchunk, Q, nh, hd).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nchunk, Q, nh)
+    dAc = dA.reshape(Bsz, nchunk, Q, nh)
+    Bc = Bm.reshape(Bsz, nchunk, Q, ns)
+    Cc = Cm.reshape(Bsz, nchunk, Q, ns)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((Bsz, nh, hd, ns), jnp.float32)
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+
+    def chunk_step(state, inp):
+        """One SSD chunk: quadratic intra-chunk + state in/out. Processing
+        chunks sequentially keeps the (Q, Q, nh) score tensor per-chunk only
+        (materializing all chunks at once is O(S·Q·nh) — catastrophic for
+        train_4k; see EXPERIMENTS.md §Perf)."""
+        xq, dtq, dAq, Bq, Cq = inp          # (B,Q,...) one chunk
+        cum = jnp.cumsum(dAq, axis=1)       # (B,Q,nh)
+        total = cum[:, -1, :]               # (B,nh)
+        # intra: score[i,j] = C_i·B_j exp(cum_i - cum_j) dt_j, j <= i
+        cb = jnp.einsum("bis,bjs->bij", Cq, Bq)                       # (B,Q,Q)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])      # (B,Q,Q,nh)
+        scores = cb[..., None] * decay * dtq[:, None, :, :] * tri[None, :, :, None]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores, xq)           # (B,Q,nh,hd)
+        # inter: contribution of the state entering this chunk
+        y_inter = jnp.einsum("bis,bih,bhps->bihp", Cq, jnp.exp(cum), state)
+        # state update
+        sdecay = jnp.exp(total[:, None, :] - cum) * dtq               # (B,Q,nh)
+        chunk_state = jnp.einsum("bjh,bjs,bjhp->bhps", sdecay, Bq, xq)
+        new_state = jnp.exp(total)[:, :, None, None] * state + chunk_state
+        return new_state, y_intra + y_inter
+
+    xs = tuple(a.transpose(1, 0, *range(2, a.ndim))
+               for a in (xc, dtc, dAc, Bc, Cc))
+    final_state, ys = jax.lax.scan(chunk_step, ssm_state, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, nh, hd)
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(Bsz, S, di).astype(u.dtype)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    y = layers.dense(p["out_proj"], y)
+    if pad_len:
+        y = y[:, :S_in]
+    return y, (new_conv_state, final_state)
+
+
+def mamba_decode(p, u, cfg: ModelConfig, conv_state, ssm_state):
+    """u: (B, 1, d) single token. States: conv (B,K-1,conv_dim), ssm (B,nh,hd,ns)."""
+    Bsz = u.shape[0]
+    nh, hd, ns, di = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_d_inner
+    K = cfg.ssm_conv
+
+    zxbcdt = layers.dense(p["in_proj"], u[:, 0])                         # (B, proj)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)      # (B,K,conv)
+    new_conv_state = window[:, 1:, :]
+    xbc_conv = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])
+    x, Bm, Cm = _split_xbc(cfg, xbc_conv)
+
+    x = x.reshape(Bsz, nh, hd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])      # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                              # (B,nh)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+
+    new_state = (decay[:, :, None, None] * ssm_state
+                 + jnp.einsum("bh,bs,bhp->bhps", dt, Bm, x))
+    y = jnp.einsum("bs,bhps->bhp", Cm, new_state) + p["D"][None, :, None] * x
+    y = y.reshape(Bsz, di).astype(u.dtype)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return layers.dense(p["out_proj"], y)[:, None, :], (new_conv_state, new_state)
+
+
+def mamba_ref_scan(p, u, cfg: ModelConfig):
+    """Token-by-token oracle (decode step iterated) for testing the chunked path."""
+    Bsz, S, _ = u.shape
+    conv = jnp.zeros((Bsz, cfg.ssm_conv - 1, cfg.ssm_d_inner + 2 * cfg.ssm_state), u.dtype)
+    ssm = jnp.zeros((Bsz, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+    ys = []
+    for t in range(S):
+        y, (conv, ssm) = mamba_decode(p, u[:, t:t + 1], cfg, conv, ssm)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), (conv, ssm)

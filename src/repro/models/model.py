@@ -1,0 +1,20 @@
+"""Model factory: config -> model object with the uniform API."""
+from __future__ import annotations
+
+from repro.models.config import AUDIO, DENSE, HYBRID, MOE, SSM, VLM, ModelConfig
+from repro.models.rwkv_model import RWKVModel
+from repro.models.transformer import Transformer
+from repro.models.whisper import WhisperModel
+from repro.models.zamba2 import Zamba2Model
+
+
+def build_model(cfg: ModelConfig, **kw):
+    if cfg.family in (DENSE, MOE, VLM):
+        return Transformer(cfg, **kw)
+    if cfg.family == SSM:
+        return RWKVModel(cfg, **kw)
+    if cfg.family == HYBRID:
+        return Zamba2Model(cfg, **kw)
+    if cfg.family == AUDIO:
+        return WhisperModel(cfg, **kw)
+    raise ValueError(f"unknown family {cfg.family}")

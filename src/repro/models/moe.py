@@ -1,0 +1,115 @@
+"""Mixture-of-Experts MLP with group-local capacity dispatch.
+
+TPU adaptation (DESIGN.md §3): instead of a global sort / giant one-hot
+dispatch tensor, tokens are split into G groups (G = data-parallel degree
+when divisible, so each group is shard-local under pjit) and each group
+dispatches into per-expert capacity buffers via int32 scatter/gather. This
+is the classic GShard/Switch "dropping" formulation with *local* capacity:
+static shapes, O(T·k + E·C·d) memory, and zero cross-shard traffic for
+routing itself (expert weights are TP/FSDP-sharded, not expert-parallel,
+because the assigned expert counts — 8, 40 — do not divide the 16-wide
+model axis; see EXPERIMENTS.md §Perf for the shard_map expert-parallel
+variant explored beyond the paper).
+
+Tokens overflowing an expert's capacity are dropped (pass through the
+residual only), standard for capacity-based MoE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+def init_moe(rng, cfg: ModelConfig):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(rng, 4)
+    def w(key, shape, scale=0.02):
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dt)
+    return {
+        "router": w(ks[0], (d, E)),
+        "gate": w(ks[1], (E, d, ff)),
+        "up": w(ks[2], (E, d, ff)),
+        "down": w(ks[3], (E, ff, d), 0.02 / np.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _pick_groups(T: int, preferred: int) -> int:
+    g = min(preferred, T)
+    while T % g:
+        g -= 1
+    return max(g, 1)
+
+
+def moe_mlp(p, x, cfg: ModelConfig, *, groups: int = 16):
+    """x: (B, S, d) -> (B, S, d). groups should match the data-shard count so
+    dispatch stays shard-local; any divisor of B*S works."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    G = _pick_groups(T, groups)
+    Tg = T // G
+    C = max(1, int(np.ceil(Tg * k / E * cfg.moe_capacity_factor)))
+    C = min(C, Tg)
+
+    xt = x.reshape(G, Tg, d)
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"].astype(jnp.float32))
+    gates, eidx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), k)  # (G,Tg,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)  # renormalize top-k
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.int32)           # (G,Tg,k,E)
+    flat_oh = onehot.reshape(G, Tg * k, E)
+    pos = jnp.cumsum(flat_oh, axis=1) - 1                        # (G,Tg*k,E)
+    pos_in_e = jnp.take_along_axis(pos, eidx.reshape(G, Tg * k, 1), axis=-1)[..., 0]
+    keep = pos_in_e < C                                          # capacity drop
+    e_flat = eidx.reshape(G, Tg * k)
+    slot = jnp.where(keep, e_flat * C + pos_in_e, E * C)         # E*C = trash slot
+
+    # scatter token ids into (E*C + 1) slots, then gather token features
+    tok_of_choice = jnp.broadcast_to(jnp.arange(Tg)[None, :, None], (G, Tg, k)).reshape(G, Tg * k)
+    buf = jnp.full((G, E * C + 1), Tg, jnp.int32)                # Tg = dummy token
+    gi = jnp.arange(G)[:, None]
+    buf = buf.at[gi, slot].set(tok_of_choice, mode="drop")
+    sel = buf[:, : E * C].reshape(G, E, C)                       # token id per slot
+    x_pad = jnp.concatenate([xt, jnp.zeros((G, 1, d), xt.dtype)], axis=1)
+    ein = jnp.take_along_axis(x_pad[:, None], sel[..., None], axis=2)  # (G,E,C,d)
+
+    # expert FFNs, batched over E
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ein, p["gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", ein, p["up"])
+    eout = jnp.einsum("gecf,efd->gecd", h, p["down"])             # (G,E,C,d)
+
+    # combine: route expert outputs back to tokens with gate weights
+    eout_flat = eout.reshape(G, E * C, d)
+    eout_flat = jnp.concatenate([eout_flat, jnp.zeros((G, 1, d), eout.dtype)], axis=1)
+    per_choice = jnp.take_along_axis(eout_flat, slot[..., None], axis=1)  # (G,Tg*k,d)
+    w = (gates.reshape(G, Tg * k) * keep).astype(jnp.float32)
+    out = (per_choice.astype(jnp.float32) * w[..., None]).reshape(G, Tg, k, d).sum(2)
+    return out.reshape(B, S, d).astype(x.dtype), _aux_loss(logits, eidx, E)
+
+
+def _aux_loss(router_logits, eidx, E):
+    """Switch-style load-balance auxiliary loss (mean over groups)."""
+    probs = jax.nn.softmax(router_logits, axis=-1)               # (G,T,E)
+    frac_tokens = jnp.mean(jax.nn.one_hot(eidx[..., 0], E), axis=1)  # top-1 assignment
+    frac_probs = jnp.mean(probs, axis=1)
+    return (E * jnp.sum(frac_tokens * frac_probs, axis=-1)).mean()
+
+
+def moe_ref(p, x, cfg: ModelConfig):
+    """Dense reference: every expert on every token (oracle for tests)."""
+    B, S, d = x.shape
+    k = cfg.experts_per_token
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32))
+    gates, eidx = jax.lax.top_k(jax.nn.softmax(logits, -1), k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    h = jax.nn.silu(jnp.einsum("bsd,edf->bsef", x, p["gate"]))
+    h = h * jnp.einsum("bsd,edf->bsef", x, p["up"])
+    allout = jnp.einsum("bsef,efd->bsed", h, p["down"]).astype(jnp.float32)  # (B,S,E,d)
+    sel = jnp.take_along_axis(allout, eidx[..., None], axis=2)   # (B,S,k,d)
+    return (sel * gates[..., None]).sum(2).astype(x.dtype)

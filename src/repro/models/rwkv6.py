@@ -1,0 +1,176 @@
+"""RWKV6 "Finch" block — attention-free, data-dependent per-channel decay.
+
+Time-mix: linear-attention-like recurrence with a (head_dim x head_dim)
+per-head state, decay w_t computed per token/channel through a LoRA
+(the defining RWKV6 feature, arXiv:2404.05892). Channel-mix: squared-ReLU
+FFN with token shift. Decode state is O(d·head_dim) — constant in sequence
+length, hence this arch runs the long_500k shape.
+
+Prefill uses a time scan (linear); a chunked formulation mirroring the
+mamba2 SSD path is a recorded perf-iteration candidate (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+def init_rwkv(rng, cfg: ModelConfig):
+    d, H, hd, r = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.rwkv_lora_dim
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(rng, 10)
+    def w(key, shape, scale=0.02):
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dt)
+    return {
+        "tm": {  # time mix
+            "mix": w(ks[0], (5, d), 0.2),  # static shift-mix for r,k,v,w,g
+            "wr": w(ks[1], (d, H * hd)),
+            "wk": w(ks[2], (d, H * hd)),
+            "wv": w(ks[3], (d, H * hd)),
+            "wg": w(ks[4], (d, H * hd)),
+            "wo": w(ks[5], (H * hd, d), 0.02 / np.sqrt(2 * cfg.num_layers)),
+            "w_base": jnp.full((H * hd,), -6.0, jnp.float32),  # decay bias
+            "w_lora_a": w(ks[6], (d, r)),
+            "w_lora_b": w(ks[7], (r, H * hd), 0.1),
+            "u": jnp.zeros((H, hd), jnp.float32),  # current-token bonus
+            "ln": layers.init_rmsnorm(hd, dt),     # per-head output norm
+        },
+        "cm": {  # channel mix
+            "mix": w(ks[8], (2, d), 0.2),
+            "wk": w(ks[9], (d, cfg.d_ff)),
+            "wv": w(jax.random.fold_in(ks[9], 1), (cfg.d_ff, d),
+                    0.02 / np.sqrt(2 * cfg.num_layers)),
+            "wr": w(jax.random.fold_in(ks[9], 2), (d, d)),
+        },
+    }
+
+
+def _shift(x, last):
+    """Token shift: prev token per position. x (B,S,d), last (B,d)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _tm_inputs(p, x, last):
+    xs = _shift(x, last)
+    mix = jax.nn.sigmoid(p["mix"].astype(jnp.float32))  # (5, d)
+    def mx(i):
+        m = mix[i].astype(x.dtype)
+        return x * m + xs * (1 - m)
+    r = layers.dense({"w": p["wr"]}, mx(0))
+    k = layers.dense({"w": p["wk"]}, mx(1))
+    v = layers.dense({"w": p["wv"]}, mx(2))
+    xw = mx(3)
+    g = jax.nn.silu(layers.dense({"w": p["wg"]}, mx(4)))
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32))
+    w_log = p["w_base"] + lora @ p["w_lora_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log))  # (B,S,H*hd) in (0,1), data-dependent
+    return r, k, v, w, g
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """r,k,v,w: (B,S,H,hd) f32; state (B,H,hd,hd). Returns y (B,S,H,hd), state."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def _wkv_chunked(r, k, v, w, u, state, chunk: int = 32):
+    """Chunked WKV6: intra-chunk pairwise per-channel decays + short scan
+    over chunk boundaries (mirrors the mamba2 SSD structure).
+
+    Per-token scans save S carries for backward (8+ GB at train_4k); the
+    chunked form saves S/chunk states and computes intra-chunk terms as
+    (Q,Q,K) einsums on the MXU. Numerics: all pairwise exponents
+    lw[t-1]-lw[j] (j<=t-1) and lw[Q]-lw[j] are <= 0 because lw=cumsum(log w)
+    decreases, so every exp() is bounded by 1 (EXPERIMENTS.md §Perf).
+    """
+    B, S, H, K = r.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:  # state-transparent padding: k=0, w=1 contribute nothing
+        zeros = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zeros(r), zeros(k), zeros(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    n = (S + pad) // Q
+
+    def reshape(a):
+        return a.reshape(B, n, Q, H, K).transpose(1, 0, 2, 3, 4)  # (n,B,Q,H,K)
+
+    rc, kc, vc, wc = map(reshape, (r, k, v, w))
+    tri_strict = jnp.tril(jnp.ones((Q, Q), jnp.float32), k=-1)
+
+    def chunk_step(s, inp):
+        rq, kq, vq, wq = inp                       # (B,Q,H,K)
+        lw = jnp.cumsum(jnp.log(jnp.maximum(wq, 1e-30)), axis=1)  # (B,Q,H,K)
+        lw_prev = lw - jnp.log(jnp.maximum(wq, 1e-30))            # lw[t-1]
+        # intra: scores[t,j] = sum_k r_t k_j exp(lw[t-1]-lw[j]), j <= t-1
+        diff = lw_prev[:, :, None] - lw[:, None, :, :]            # (B,Q,Q,H,K)
+        scores = jnp.einsum("bthk,bjhk,btjhk->bhtj", rq, kq,
+                            jnp.exp(jnp.minimum(diff, 0.0)))
+        scores = scores * tri_strict[None, None]
+        y_intra = jnp.einsum("bhtj,bjhv->bthv", scores, vq)
+        # diagonal bonus: (r_t . (u*k_t)) v_t
+        diag = jnp.einsum("bthk,hk,bthk->bth", rq, u, kq)
+        y_intra = y_intra + diag[..., None] * vq
+        # inter: r_t * exp(lw[t-1]) against the incoming state
+        rdec = rq * jnp.exp(lw_prev)
+        y_inter = jnp.einsum("bthk,bhkv->bthv", rdec, s)
+        # state update: S' = diag(exp(lw_Q)) S + sum_j diag(exp(lw_Q-lw_j)) k_j^T v_j
+        lw_last = lw[:, -1][:, None]                              # (B,1,H,K)
+        kdec = kq * jnp.exp(jnp.minimum(lw_last - lw, 0.0))
+        s = (jnp.exp(lw[:, -1])[..., None] * s
+             + jnp.einsum("bjhk,bjhv->bhkv", kdec, vq))
+        return s, y_intra + y_inter
+
+    state, ys = jax.lax.scan(chunk_step, state, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, n * Q, H, K)
+    return y[:, :S], state
+
+
+def time_mix(p, x, cfg: ModelConfig, last_x, wkv_state, *,
+             wkv_impl: str = "chunked"):
+    B, S, d = x.shape
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    r, k, v, w, g = _tm_inputs(p, x, last_x)
+    shp = (B, S, H, hd)
+    r, k, v = (a.reshape(shp).astype(jnp.float32) for a in (r, k, v))
+    w = w.reshape(shp)
+    if wkv_impl == "chunked" and S > 1:
+        y, wkv_state = _wkv_chunked(r, k, v, w, p["u"], wkv_state)
+    else:
+        y, wkv_state = _wkv_scan(r, k, v, w, p["u"], wkv_state)
+    y = layers.rmsnorm(p["ln"], y.astype(x.dtype), cfg.norm_eps).reshape(B, S, H * hd)
+    out = layers.dense({"w": p["wo"]}, y * g)
+    return out, x[:, -1, :], wkv_state
+
+
+def channel_mix(p, x, cfg: ModelConfig, last_x):
+    xs = _shift(x, last_x)
+    mix = jax.nn.sigmoid(p["mix"].astype(jnp.float32))
+    mk = mix[0].astype(x.dtype)
+    mr = mix[1].astype(x.dtype)
+    xk = x * mk + xs * (1 - mk)
+    xr = x * mr + xs * (1 - mr)
+    k = jnp.square(jax.nn.relu(layers.dense({"w": p["wk"]}, xk)))
+    out = jax.nn.sigmoid(layers.dense({"w": p["wr"]}, xr)) * layers.dense({"w": p["wv"]}, k)
+    return out, x[:, -1, :]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int):
+    """Per-layer recurrent state pytree (stacked over layers by the model)."""
+    d, H, hd = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "tm_x": jnp.zeros((batch, d), cfg.jnp_dtype),
+        "cm_x": jnp.zeros((batch, d), cfg.jnp_dtype),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }

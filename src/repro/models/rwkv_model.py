@@ -1,0 +1,101 @@
+"""RWKV6 full model: embed -> [time_mix + channel_mix] x L -> head.
+
+Decode state is constant-size (token-shift vectors + per-head WKV matrices),
+so prefill and decode share one forward path (decode = prefill with S=1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, rwkv6
+from repro.sharding.ctx import constrain
+from repro.models.config import ModelConfig
+
+
+def init_rwkv_block(rng, cfg: ModelConfig):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": layers.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+        "ln2": layers.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+        "body": rwkv6.init_rwkv(k1, cfg),
+    }
+
+
+class RWKVModel:
+    def __init__(self, cfg: ModelConfig, *, remat: bool = True, **_):
+        self.cfg = cfg
+        self.remat = remat
+
+    def init(self, rng):
+        cfg = self.cfg
+        ke, kl, kh = jax.random.split(rng, 3)
+        lp = jax.vmap(lambda r: init_rwkv_block(r, cfg))(jax.random.split(kl, cfg.num_layers))
+        return {
+            "embed": (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(cfg.jnp_dtype),
+            "layers": lp,
+            "final_norm": layers.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+            "lm_head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab_size),
+                                          jnp.float32) * 0.02).astype(cfg.jnp_dtype),
+        }
+
+    def init_cache(self, batch_size: int, cache_len: int = 0, prefilled_len: int = 0):
+        """cache_len is irrelevant for a recurrent model (state is O(1) in seq)."""
+        cfg = self.cfg
+        st = rwkv6.init_rwkv_state(cfg, batch_size)
+        st = jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)), st)
+        st = dict(st, pos=jnp.full((batch_size,), prefilled_len, jnp.int32))
+        return st
+
+    def _forward(self, params, x, state):
+        cfg = self.cfg
+
+        def body(x, lp_state):
+            x = constrain(x, "act_btd")
+            lp, tm_x, cm_x, wkv = lp_state
+            h = layers.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            out, tm_x, wkv = rwkv6.time_mix(lp["body"]["tm"], h, cfg, tm_x, wkv)
+            x = x + out
+            h = layers.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            out, cm_x = rwkv6.channel_mix(lp["body"]["cm"], h, cfg, cm_x)
+            return x + out, (tm_x, cm_x, wkv)
+
+        if self.remat:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        xs = (params["layers"], state["tm_x"], state["cm_x"], state["wkv"])
+        x, (tm_x, cm_x, wkv) = jax.lax.scan(body, x, xs)
+        return x, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv}
+
+    def prefill(self, params, batch, cache_len: int = 0):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = constrain(params["embed"][tokens], "act_btd")
+        state = self.init_cache(B)
+        x, new_state = self._forward(params, x, state)
+        lens = batch.get("lengths")
+        if lens is None:
+            lens = jnp.full((B,), S, jnp.int32)
+        last = jnp.take_along_axis(x, (lens - 1)[:, None, None], axis=1)[:, 0]
+        logits = self._logits(params, last)
+        new_state["pos"] = lens.astype(jnp.int32)
+        return logits, new_state
+
+    def decode_step(self, params, tokens, cache):
+        x = params["embed"][tokens[:, None]]
+        x, new_state = self._forward(params, x, cache)
+        new_state["pos"] = cache["pos"] + 1
+        return self._logits(params, x[:, 0]), new_state
+
+    def _logits(self, params, x):
+        x = layers.rmsnorm(params["final_norm"], x, self.cfg.norm_eps)
+        return (x @ params["lm_head"]).astype(jnp.float32)
+
+    def loss(self, params, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = constrain(params["embed"][tokens], "act_btd")
+        x, _ = self._forward(params, x, self.init_cache(B))
+        x = layers.rmsnorm(params["final_norm"], x, self.cfg.norm_eps)
+        logits = (x @ params["lm_head"]).astype(jnp.float32)
+        return layers.cross_entropy_loss(logits, batch["labels"])

@@ -1,0 +1,295 @@
+"""Generic decoder-only transformer: dense, MoE and VLM families.
+
+Functional model object with a uniform API consumed by the serving engine,
+the training loop and the multi-pod dry-run:
+
+  init(rng) -> params
+  prefill(params, batch) -> (last_token_logits (B,V), cache)
+  decode_step(params, tokens (B,), cache) -> (logits (B,V), cache)
+  init_cache(batch, cache_len, prefilled_len) -> cache (zeros, for dry-run)
+  loss(params, batch) -> scalar
+
+Layers are stacked and executed with lax.scan (pairs of layers for gemma2's
+local/global alternation) to keep HLO size O(1) in depth.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention, layers, moe as moe_lib
+from repro.sharding.ctx import constrain
+from repro.models.config import AUDIO, VLM, ModelConfig
+
+Params = Any
+
+
+def _norm_init(cfg: ModelConfig, d: int):
+    if cfg.family == AUDIO:
+        return layers.init_layernorm(d, cfg.jnp_dtype)
+    return layers.init_rmsnorm(d, cfg.jnp_dtype)
+
+
+def _norm(cfg: ModelConfig, p, x):
+    if cfg.family == AUDIO:
+        return layers.layernorm(p, x, cfg.norm_eps)
+    return layers.rmsnorm(p, x, cfg.norm_eps)
+
+
+def init_block(rng, cfg: ModelConfig):
+    """One transformer block (attention + MLP/MoE + norms)."""
+    ks = jax.random.split(rng, 4)
+    p = {
+        "ln1": _norm_init(cfg, cfg.d_model),
+        "attn": attention.init_attn(ks[0], cfg),
+        "ln2": _norm_init(cfg, cfg.d_model),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_lib.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.jnp_dtype, cfg.mlp_act)
+    if cfg.use_post_norm:
+        p["post_ln1"] = _norm_init(cfg, cfg.d_model)
+        p["post_ln2"] = _norm_init(cfg, cfg.d_model)
+    return p
+
+
+def block_prefill(p, x, positions, cfg: ModelConfig, *, window: int,
+                  kv_lens=None, cache_len: int = 0, impl: str = "xla",
+                  moe_groups: int = 16, cache_dtype=None):
+    """Returns (x, (cache_k, cache_v), aux_loss). cache_len>0 builds a decode cache."""
+    h = _norm(cfg, p["ln1"], x)
+    a, (k, v) = attention.attn_prefill(p["attn"], h, positions, cfg,
+                                       window=window, kv_lens=kv_lens, impl=impl)
+    if cfg.use_post_norm:
+        a = _norm(cfg, p["post_ln1"], a)
+    x = x + a
+    h = _norm(cfg, p["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        m, aux = moe_lib.moe_mlp(p["moe"], h, cfg, groups=moe_groups)
+    else:
+        m = layers.mlp(p["mlp"], h, cfg.mlp_act)
+    if cfg.use_post_norm:
+        m = _norm(cfg, p["post_ln2"], m)
+    x = x + m
+    kv_cache = None
+    if cache_len:
+        kv_cache = attention.write_prefill_cache(k, v, cache_len,
+                                                 dtype=cache_dtype)
+    return x, kv_cache, aux
+
+
+def block_decode(p, x, positions, cfg: ModelConfig, cache_k, cache_v, lengths,
+                 *, impl: str = "xla", moe_groups: int = 16):
+    """x (B,1,d). Writes the current token's KV then attends. Returns (x, ck, cv)."""
+    h = _norm(cfg, p["ln1"], x)
+    k_new, v_new = attention.project_kv_for_cache(p["attn"], h, positions, cfg)
+    cache_k, cache_v = attention.write_decode_cache(cache_k, cache_v, k_new, v_new, positions)
+    a = attention.attn_decode(p["attn"], h, cache_k, cache_v, positions, lengths, cfg, impl=impl)
+    if cfg.use_post_norm:
+        a = _norm(cfg, p["post_ln1"], a)
+    x = x + a
+    h = _norm(cfg, p["ln2"], x)
+    if cfg.is_moe:
+        m, _ = moe_lib.moe_mlp(p["moe"], h, cfg, groups=moe_groups)
+    else:
+        m = layers.mlp(p["mlp"], h, cfg.mlp_act)
+    if cfg.use_post_norm:
+        m = _norm(cfg, p["post_ln2"], m)
+    return x + m, cache_k, cache_v
+
+
+class Transformer:
+    """Dense / MoE / VLM decoder-only model."""
+
+    def __init__(self, cfg: ModelConfig, *, impl: str = "xla", moe_groups: int = 16,
+                 long_context: bool = False, remat: bool = True,
+                 cache_dtype: str | None = None):
+        self.cfg = cfg
+        self.impl = impl
+        self.moe_groups = moe_groups
+        self.long_context = long_context
+        self.remat = remat
+        # quantized KV cache (e.g. "float8_e4m3fn"): halves decode cache HBM
+        # footprint and bandwidth; attention math upcasts to f32 on read
+        self.cache_dtype = jnp.dtype(cache_dtype) if cache_dtype else cfg.jnp_dtype
+        if cfg.local_global:
+            assert cfg.num_layers % 2 == 0, "local/global alternation needs even layers"
+
+    # --- parameters -------------------------------------------------------
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        k_embed, k_layers, k_head = jax.random.split(rng, 3)
+        lkeys = jax.random.split(k_layers, cfg.num_layers)
+        lp = jax.vmap(lambda r: init_block(r, cfg))(lkeys)
+        if cfg.local_global:  # restack (L,) -> (L/2, 2)
+            lp = jax.tree.map(lambda a: a.reshape(cfg.num_layers // 2, 2, *a.shape[1:]), lp)
+        p = {
+            "embed": (jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(cfg.jnp_dtype),
+            "layers": lp,
+            "final_norm": _norm_init(cfg, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = (jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size),
+                                              jnp.float32) * 0.02).astype(cfg.jnp_dtype)
+        return p
+
+    # --- helpers ----------------------------------------------------------
+    def _embed(self, params, tokens):
+        x = params["embed"][tokens]
+        if self.cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(self.cfg.d_model), x.dtype)
+        return constrain(x, "act_btd")
+
+    def _logits(self, params, x):
+        head = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        logits = _norm(self.cfg, params["final_norm"], x) @ head
+        return layers.softcap(logits.astype(jnp.float32), self.cfg.final_logit_softcap)
+
+    def _windows(self) -> list[int]:
+        cfg = self.cfg
+        if cfg.local_global:
+            return [cfg.layer_window(0, self.long_context),
+                    cfg.layer_window(1, self.long_context)]
+        return [cfg.layer_window(0, self.long_context)]
+
+    def _cache_sizes(self, seq_len: int) -> list[int]:
+        return [min(w, seq_len) if w else seq_len for w in self._windows()]
+
+    def _maybe_remat(self, f):
+        if not self.remat:
+            return f
+        return jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def _train_impl(self, seq_len: int) -> str:
+        # naive attention trains with less backward memory at moderate seqs
+        if self.impl == "xla" and seq_len <= 8192:
+            return "xla_naive"
+        return self.impl
+
+    # --- forward over the full sequence ------------------------------------
+    def _forward(self, params, x, positions, kv_lens, cache_len: int,
+                 impl: str | None = None):
+        """Runs all layers; returns (hidden, caches, total_aux)."""
+        cfg = self.cfg
+        impl = impl or self.impl
+        windows = self._windows()
+        cache_sizes = self._cache_sizes(cache_len) if cache_len else [0] * len(windows)
+
+        def body(carry, lp):
+            x, aux = carry
+            x = constrain(x, "act_btd")
+            outs = []
+            for i, (w, cs) in enumerate(zip(windows, cache_sizes)):
+                sub = jax.tree.map(lambda a: a[i], lp) if cfg.local_global else lp
+                x, kv, a = block_prefill(
+                    sub, x, positions, cfg, window=w, kv_lens=kv_lens,
+                    cache_len=cs, impl=impl, moe_groups=self.moe_groups,
+                    cache_dtype=self.cache_dtype)
+                aux = aux + a
+                outs.append(kv)
+            return (x, aux), outs
+
+        (x, aux), caches = jax.lax.scan(
+            self._maybe_remat(body), (x, jnp.zeros((), jnp.float32)), params["layers"])
+        return x, caches, aux
+
+    # --- public API ---------------------------------------------------------
+    def prefill(self, params, batch, cache_len: int = 0):
+        """batch: tokens (B,S) [+ frontend_embeds (B,T,d)] [+ lengths (B,)].
+        Returns (last-token logits (B,V), cache|None)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        if cfg.family == VLM and "frontend_embeds" in batch:
+            fe = batch["frontend_embeds"].astype(x.dtype)
+            x = jnp.concatenate([fe, x], axis=1)  # image tokens first
+            S = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        kv_lens = batch.get("lengths")
+        if kv_lens is None:
+            kv_lens = jnp.full((B,), S, jnp.int32)
+        x, caches, _ = self._forward(params, x, positions, kv_lens, cache_len or S)
+        last = jnp.take_along_axis(x, (kv_lens - 1)[:, None, None], axis=1)[:, 0]
+        logits = self._logits(params, last)
+        cache = None
+        if cache_len:
+            cache = self._pack_cache(caches, kv_lens)
+        return logits, cache
+
+    def _pack_cache(self, caches, lengths):
+        cache = {"pos": lengths.astype(jnp.int32)}
+        for i, kv in enumerate(caches):
+            k, v = kv
+            cache[f"k{i}"], cache[f"v{i}"] = k, v
+        return cache
+
+    def init_cache(self, batch_size: int, cache_len: int, prefilled_len: int = 0):
+        """Zero cache for dry-run decode lowering (no prefill executed)."""
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        cache = {"pos": jnp.full((batch_size,), prefilled_len, jnp.int32)}
+        L = cfg.num_layers // (2 if cfg.local_global else 1)
+        for i, cs in enumerate(self._cache_sizes(cache_len)):
+            shape = (L, batch_size, cs, cfg.num_kv_heads, hd)
+            cache[f"k{i}"] = jnp.zeros(shape, self.cache_dtype)
+            cache[f"v{i}"] = jnp.zeros(shape, self.cache_dtype)
+        return cache
+
+    def decode_step(self, params, tokens, cache):
+        """tokens (B,) int32. Returns (logits (B,V), new cache)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        positions = cache["pos"]
+        lengths = positions + 1
+        x = self._embed(params, tokens[:, None])
+        n_classes = 2 if cfg.local_global else 1
+
+        def body(x, lp_and_cache):
+            lp = lp_and_cache[0]
+            kvs = lp_and_cache[1:]
+            new_kvs = []
+            for i in range(n_classes):
+                sub = jax.tree.map(lambda a: a[i], lp) if cfg.local_global else lp
+                ck, cv = kvs[2 * i], kvs[2 * i + 1]
+                x, ck, cv = block_decode(sub, x, positions, cfg, ck, cv, lengths,
+                                         impl=self.impl, moe_groups=self.moe_groups)
+                new_kvs += [ck, cv]
+            return x, tuple(new_kvs)
+
+        xs = [params["layers"]]
+        for i in range(n_classes):
+            xs += [cache[f"k{i}"], cache[f"v{i}"]]
+        x, new_caches = jax.lax.scan(body, x, tuple(xs))
+        logits = self._logits(params, x[:, 0])
+        new_cache = {"pos": positions + 1}
+        for i in range(n_classes):
+            new_cache[f"k{i}"], new_cache[f"v{i}"] = new_caches[2 * i], new_caches[2 * i + 1]
+        return logits, new_cache
+
+    def loss(self, params, batch):
+        """batch: tokens (B,S), labels (B,S) with -1 ignored."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        if cfg.family == VLM and "frontend_embeds" in batch:
+            fe = batch["frontend_embeds"].astype(x.dtype)
+            T = fe.shape[1]
+            x = jnp.concatenate([fe, x], axis=1)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], (B, x.shape[1]))
+        kv_lens = jnp.full((B,), x.shape[1], jnp.int32)
+        x, _, aux = self._forward(params, x, positions, kv_lens, 0,
+                                  impl=self._train_impl(x.shape[1]))
+        if cfg.family == VLM and "frontend_embeds" in batch:
+            x = x[:, T:]
+        logits = self._logits(params, x)
+        ce = layers.cross_entropy_loss(logits, batch["labels"])
+        return ce + 0.01 * aux

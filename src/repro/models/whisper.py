@@ -1,0 +1,229 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356).
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor is
+a STUB: ``input_specs()`` provides precomputed frame embeddings (B, T, d) and
+this module implements the transformer backbone that consumes them —
+bidirectional encoder + causal decoder with cross-attention.
+
+Serving mapping (DESIGN §4): the encoder pass plays the role of Prefill
+(latency-relaxed pool), the decoder loop the role of Decode — OOCO scheduling
+applies unchanged.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention, layers
+from repro.sharding.ctx import constrain
+from repro.models.config import ModelConfig
+
+
+def _ln(cfg):
+    return layers.init_layernorm(cfg.d_model, cfg.jnp_dtype)
+
+
+def init_enc_block(rng, cfg: ModelConfig):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": _ln(cfg), "attn": attention.init_attn(k1, cfg),
+        "ln2": _ln(cfg),
+        "mlp": layers.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.jnp_dtype, "gelu_mlp"),
+    }
+
+
+def init_dec_block(rng, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "ln1": _ln(cfg), "self_attn": attention.init_attn(k1, cfg),
+        "ln2": _ln(cfg), "cross_attn": attention.init_attn(k2, cfg),
+        "ln3": _ln(cfg),
+        "mlp": layers.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.jnp_dtype, "gelu_mlp"),
+    }
+
+
+class WhisperModel:
+    def __init__(self, cfg: ModelConfig, *, impl: str = "xla", remat: bool = True, **_):
+        self.cfg = cfg
+        self.impl = impl
+        self.remat = remat
+
+    def init(self, rng):
+        cfg = self.cfg
+        ke, kenc, kdec = jax.random.split(rng, 3)
+        enc = jax.vmap(lambda r: init_enc_block(r, cfg))(
+            jax.random.split(kenc, cfg.encoder_layers))
+        dec = jax.vmap(lambda r: init_dec_block(r, cfg))(
+            jax.random.split(kdec, cfg.num_layers))
+        return {
+            "embed": (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(cfg.jnp_dtype),
+            "enc_layers": enc,
+            "dec_layers": dec,
+            "enc_norm": _ln(cfg),
+            "dec_norm": _ln(cfg),
+        }
+
+    # --- encoder (≈ Prefill in OOCO terms) ---------------------------------
+    def encode(self, params, frames, frame_lens=None, impl: str | None = None):
+        """frames: (B, T, d) precomputed embeddings (frontend stub)."""
+        cfg = self.cfg
+        impl = impl or self.impl
+        B, T, _ = frames.shape
+        pos = jnp.asarray(layers.sinusoidal_positions(T, cfg.d_model),
+                          frames.dtype)
+        x = constrain(frames + pos[None], "act_btd")
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+        if frame_lens is None:
+            frame_lens = jnp.full((B,), T, jnp.int32)
+
+        def body(x, lp):
+            x = constrain(x, "act_btd")
+            h = layers.layernorm(lp["ln1"], x, cfg.norm_eps)
+            a, _ = attention.attn_prefill(lp["attn"], h, positions, cfg,
+                                          causal=False, kv_lens=frame_lens,
+                                          impl=impl)
+            x = x + a
+            h = layers.layernorm(lp["ln2"], x, cfg.norm_eps)
+            return x + layers.mlp(lp["mlp"], h, "gelu_mlp"), None
+
+        if self.remat:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return layers.layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+    # --- decoder -----------------------------------------------------------
+    def _cross_kv(self, lp, enc_out):
+        """Project encoder output to per-layer cross K/V (cached once)."""
+        B, T, _ = enc_out.shape
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        k = layers.dense(lp["cross_attn"]["wk"], enc_out).reshape(B, T, cfg.num_kv_heads, hd)
+        v = layers.dense(lp["cross_attn"]["wv"], enc_out).reshape(B, T, cfg.num_kv_heads, hd)
+        return k, v
+
+    def _dec_forward(self, params, x, positions, tok_lens, enc_out, enc_lens,
+                     cache_len: int, impl: str | None = None):
+        cfg = self.cfg
+        impl = impl or self.impl
+
+        def body(carry, lp):
+            x = constrain(carry, "act_btd")
+            h = layers.layernorm(lp["ln1"], x, cfg.norm_eps)
+            a, kv = attention.attn_prefill(lp["self_attn"], h, positions, cfg,
+                                           kv_lens=tok_lens, impl=impl)
+            x = x + a
+            h = layers.layernorm(lp["ln2"], x, cfg.norm_eps)
+            ck, cv = self._cross_kv(lp, enc_out)
+            a, _ = attention.attn_prefill(lp["cross_attn"], h, positions, cfg,
+                                          cross_kv=(ck, cv), kv_lens=enc_lens,
+                                          impl=impl)
+            x = x + a
+            h = layers.layernorm(lp["ln3"], x, cfg.norm_eps)
+            x = x + layers.mlp(lp["mlp"], h, "gelu_mlp")
+            out = None
+            if cache_len:
+                sk, sv = attention.write_prefill_cache(kv[0], kv[1], cache_len)
+                out = (sk, sv, ck, cv)
+            return x, out
+
+        if self.remat:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        return jax.lax.scan(body, x, params["dec_layers"])
+
+    def prefill(self, params, batch, cache_len: int = 0):
+        """batch: frontend_embeds (B,T,d) audio frames, tokens (B,S) decoder
+        prompt, [lengths (B,)]. Returns (last-token logits, cache)."""
+        cfg = self.cfg
+        frames = batch["frontend_embeds"]
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        enc_lens = batch.get("frame_lens")
+        enc_out = self.encode(params, frames, enc_lens)
+        if enc_lens is None:
+            enc_lens = jnp.full((B,), frames.shape[1], jnp.int32)
+        tok_lens = batch.get("lengths")
+        if tok_lens is None:
+            tok_lens = jnp.full((B,), S, jnp.int32)
+
+        pos_emb = jnp.asarray(layers.sinusoidal_positions(S, cfg.d_model), cfg.jnp_dtype)
+        x = params["embed"][tokens] + pos_emb[None]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, caches = self._dec_forward(params, x, positions, tok_lens, enc_out,
+                                      enc_lens, cache_len or S)
+        last = jnp.take_along_axis(x, (tok_lens - 1)[:, None, None], axis=1)[:, 0]
+        logits = self._logits(params, last)
+        sk, sv, ck, cv = caches
+        cache = {"self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv,
+                 "enc_lens": enc_lens, "pos": tok_lens.astype(jnp.int32)}
+        return logits, cache
+
+    def init_cache(self, batch_size: int, cache_len: int, prefilled_len: int = 0,
+                   enc_len: int = 1500):
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        L = cfg.num_layers
+        z = lambda T: jnp.zeros((L, batch_size, T, cfg.num_kv_heads, hd), cfg.jnp_dtype)
+        return {"self_k": z(cache_len), "self_v": z(cache_len),
+                "cross_k": z(enc_len), "cross_v": z(enc_len),
+                "enc_lens": jnp.full((batch_size,), enc_len, jnp.int32),
+                "pos": jnp.full((batch_size,), prefilled_len, jnp.int32)}
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        pos = cache["pos"]
+        lengths = pos + 1
+        # sinusoidal position of the current token, gathered per request
+        max_pos = cache["self_k"].shape[2] + 1  # cache is not windowed; pos <= C
+        table = jnp.asarray(layers.sinusoidal_positions(max_pos, cfg.d_model), cfg.jnp_dtype)
+        x = params["embed"][tokens[:, None]] + table[jnp.minimum(pos, max_pos - 1)][:, None]
+
+        def body(x, inp):
+            lp, sk, sv, ck, cv = inp
+            h = layers.layernorm(lp["ln1"], x, cfg.norm_eps)
+            k_new, v_new = attention.project_kv_for_cache(lp["self_attn"], h, pos, cfg)
+            sk, sv = attention.write_decode_cache(sk, sv, k_new, v_new, pos)
+            a = attention.attn_decode(lp["self_attn"], h, sk, sv, pos, lengths,
+                                      cfg, impl=self.impl)
+            x = x + a
+            h = layers.layernorm(lp["ln2"], x, cfg.norm_eps)
+            hd_ = cfg.head_dim_
+            q = layers.dense(lp["cross_attn"]["wq"], h).reshape(B, cfg.num_heads, hd_)
+            a = attention.decode_attention_xla(q, ck, cv, cache["enc_lens"])
+            a = layers.dense(lp["cross_attn"]["wo"], a.reshape(B, 1, -1))
+            x = x + a
+            h = layers.layernorm(lp["ln3"], x, cfg.norm_eps)
+            return x + layers.mlp(lp["mlp"], h, "gelu_mlp"), (sk, sv)
+
+        xs = (params["dec_layers"], cache["self_k"], cache["self_v"],
+              cache["cross_k"], cache["cross_v"])
+        x, (sk, sv) = jax.lax.scan(body, x, xs)
+        logits = self._logits(params, x[:, 0])
+        new_cache = dict(cache, self_k=sk, self_v=sv, pos=pos + 1)
+        return logits, new_cache
+
+    def _logits(self, params, x):
+        x = layers.layernorm(params["dec_norm"], x, self.cfg.norm_eps)
+        return (x @ params["embed"].T).astype(jnp.float32)  # tied head
+
+    def loss(self, params, batch):
+        """batch: frontend_embeds, tokens, labels."""
+        cfg = self.cfg
+        frames = batch["frontend_embeds"]
+        impl = ("xla_naive" if self.impl == "xla" and frames.shape[1] <= 8192
+                else self.impl)
+        enc_out = self.encode(params, frames, impl=impl)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        enc_lens = jnp.full((B,), enc_out.shape[1], jnp.int32)
+        tok_lens = jnp.full((B,), S, jnp.int32)
+        pos_emb = jnp.asarray(layers.sinusoidal_positions(S, cfg.d_model), cfg.jnp_dtype)
+        x = params["embed"][tokens] + pos_emb[None]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, _ = self._dec_forward(params, x, positions, tok_lens, enc_out,
+                                 enc_lens, 0, impl=impl)
+        x = layers.layernorm(params["dec_norm"], x, cfg.norm_eps)
+        logits = (x @ params["embed"].T).astype(jnp.float32)
+        return layers.cross_entropy_loss(logits, batch["labels"])

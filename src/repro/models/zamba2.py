@@ -1,0 +1,219 @@
+"""Zamba2 hybrid: stacked Mamba2 layers with a single *shared* attention
+block applied every ``shared_attn_every`` layers (arXiv:2411.15242).
+
+The shared block's weights are one parameter set; each of its application
+points keeps its own KV cache. Mamba layers are scanned in groups between
+attention applications (81 = 13 groups of 6 + trailing 3 by default).
+
+Decode state: per-mamba-layer (conv, ssm) states — O(1) in sequence — plus
+the shared-attn KV caches, which in long-context mode are windowed
+(DESIGN.md §4), so the arch runs long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, mamba2
+from repro.models.config import ModelConfig
+from repro.models.transformer import block_decode, block_prefill, init_block
+from repro.sharding.ctx import constrain
+
+
+class Zamba2Model:
+    def __init__(self, cfg: ModelConfig, *, impl: str = "xla",
+                 long_context: bool = False, remat: bool = True, **_):
+        assert cfg.shared_attn_every > 0
+        self.cfg = cfg
+        self.impl = impl
+        self.long_context = long_context
+        self.remat = remat
+        g = cfg.shared_attn_every
+        self.n_full_groups = cfg.num_layers // g
+        self.trailing = cfg.num_layers - self.n_full_groups * g
+        self.n_attn = self.n_full_groups  # one shared-attn application per full group
+
+    def _attn_window(self) -> int:
+        # full attention normally; windowed in long-context mode (DESIGN §4)
+        return (self.cfg.global_window_long or 32768) if self.long_context else 0
+
+    def _attn_cache_size(self, seq_len: int) -> int:
+        w = self._attn_window()
+        return min(w, seq_len) if w else seq_len
+
+    # --- params -----------------------------------------------------------
+    def init(self, rng):
+        cfg = self.cfg
+        ke, km, ka, kh = jax.random.split(rng, 4)
+        mp = jax.vmap(lambda r: self._init_mamba_layer(r))(
+            jax.random.split(km, cfg.num_layers))
+        return {
+            "embed": (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(cfg.jnp_dtype),
+            "mamba_layers": mp,
+            "shared_attn": init_block(ka, cfg),  # one block, reused at 13 points
+            "final_norm": layers.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+            "lm_head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab_size),
+                                          jnp.float32) * 0.02).astype(cfg.jnp_dtype),
+        }
+
+    def _init_mamba_layer(self, rng):
+        return {
+            "ln": layers.init_rmsnorm(self.cfg.d_model, self.cfg.jnp_dtype),
+            "mamba": mamba2.init_mamba(rng, self.cfg),
+        }
+
+    def _slice_layers(self, params, start, size):
+        return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start, start + size),
+                            params["mamba_layers"])
+
+    # --- cache ------------------------------------------------------------
+    def init_cache(self, batch_size: int, cache_len: int = 0, prefilled_len: int = 0):
+        cfg = self.cfg
+        L = cfg.num_layers
+        conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_state
+        C = self._attn_cache_size(max(cache_len, 1))
+        return {
+            "conv": jnp.zeros((L, batch_size, cfg.ssm_conv - 1, conv_dim), cfg.jnp_dtype),
+            "ssm": jnp.zeros((L, batch_size, cfg.ssm_nheads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32),
+            "attn_k": jnp.zeros((self.n_attn, batch_size, C, cfg.num_kv_heads,
+                                 cfg.head_dim_), cfg.jnp_dtype),
+            "attn_v": jnp.zeros((self.n_attn, batch_size, C, cfg.num_kv_heads,
+                                 cfg.head_dim_), cfg.jnp_dtype),
+            "pos": jnp.full((batch_size,), prefilled_len, jnp.int32),
+        }
+
+    # --- forward ----------------------------------------------------------
+    def _mamba_group_prefill(self, lp, x, conv0, ssm0):
+        cfg = self.cfg
+
+        def body(x, inp):
+            x = constrain(x, "act_btd")
+            lp_i, conv, ssm = inp
+            h = layers.rmsnorm(lp_i["ln"], x, cfg.norm_eps)
+            out, (conv, ssm) = mamba2.mamba_prefill(lp_i["mamba"], h, cfg, conv, ssm)
+            return x + out, (conv, ssm)
+
+        if self.remat:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, (conv, ssm) = jax.lax.scan(body, x, (lp, conv0, ssm0))
+        return x, conv, ssm
+
+    def _mamba_group_decode(self, lp, x, conv0, ssm0):
+        cfg = self.cfg
+
+        def body(x, inp):
+            lp_i, conv, ssm = inp
+            h = layers.rmsnorm(lp_i["ln"], x, cfg.norm_eps)
+            out, (conv, ssm) = mamba2.mamba_decode(lp_i["mamba"], h, cfg, conv, ssm)
+            return x + out, (conv, ssm)
+
+        return jax.lax.scan(body, x, (lp, conv0, ssm0))
+
+    def _groups(self):
+        g = self.cfg.shared_attn_every
+        out = [(i * g, g, True) for i in range(self.n_full_groups)]
+        if self.trailing:
+            out.append((self.n_full_groups * g, self.trailing, False))
+        return out  # (start, size, followed_by_attn)
+
+    def prefill(self, params, batch, cache_len: int = 0):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        cache_len = cache_len or S
+        x = constrain(params["embed"][tokens], "act_btd")
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        lens = batch.get("lengths")
+        if lens is None:
+            lens = jnp.full((B,), S, jnp.int32)
+
+        convs, ssms, aks, avs = [], [], [], []
+        window = self._attn_window()
+        C = self._attn_cache_size(cache_len)
+        sab = params["shared_attn"]
+        for (start, size, with_attn) in self._groups():
+            lp = self._slice_layers(params, start, size)
+            conv0 = jnp.zeros((size, B, cfg.ssm_conv - 1,
+                               cfg.ssm_d_inner + 2 * cfg.ssm_state), x.dtype)
+            ssm0 = jnp.zeros((size, B, cfg.ssm_nheads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32)
+            x, conv, ssm = self._mamba_group_prefill(lp, x, conv0, ssm0)
+            convs.append(conv)
+            ssms.append(ssm)
+            if with_attn:
+                x, kv, _ = block_prefill(sab, x, positions, cfg, window=window,
+                                         kv_lens=lens, cache_len=C, impl=self.impl)
+                aks.append(kv[0])
+                avs.append(kv[1])
+
+        last = jnp.take_along_axis(x, (lens - 1)[:, None, None], axis=1)[:, 0]
+        logits = self._logits(params, last)
+        cache = {
+            "conv": jnp.concatenate(convs, axis=0).astype(cfg.jnp_dtype),
+            "ssm": jnp.concatenate(ssms, axis=0),
+            "attn_k": jnp.stack(aks, axis=0),
+            "attn_v": jnp.stack(avs, axis=0),
+            "pos": lens.astype(jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        x = params["embed"][tokens[:, None]]
+        pos = cache["pos"]
+        lengths = pos + 1
+        convs, ssms, aks, avs = [], [], [], []
+        sab = params["shared_attn"]
+        ai = 0
+        for (start, size, with_attn) in self._groups():
+            lp = self._slice_layers(params, start, size)
+            conv0 = jax.lax.slice_in_dim(cache["conv"], start, start + size)
+            ssm0 = jax.lax.slice_in_dim(cache["ssm"], start, start + size)
+            x, (conv, ssm) = self._mamba_group_decode(lp, x, conv0, ssm0)
+            convs.append(conv)
+            ssms.append(ssm)
+            if with_attn:
+                ck, cv = cache["attn_k"][ai], cache["attn_v"][ai]
+                x, ck, cv = block_decode(sab, x, pos, cfg, ck, cv, lengths,
+                                         impl=self.impl)
+                aks.append(ck)
+                avs.append(cv)
+                ai += 1
+        logits = self._logits(params, x[:, 0])
+        new_cache = {
+            "conv": jnp.concatenate(convs, axis=0),
+            "ssm": jnp.concatenate(ssms, axis=0),
+            "attn_k": jnp.stack(aks, axis=0),
+            "attn_v": jnp.stack(avs, axis=0),
+            "pos": pos + 1,
+        }
+        return logits, new_cache
+
+    def _logits(self, params, x):
+        x = layers.rmsnorm(params["final_norm"], x, self.cfg.norm_eps)
+        return (x @ params["lm_head"]).astype(jnp.float32)
+
+    def loss(self, params, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        cfg = self.cfg
+        x = constrain(params["embed"][tokens], "act_btd")
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        lens = jnp.full((B,), S, jnp.int32)
+        sab = params["shared_attn"]
+        for (start, size, with_attn) in self._groups():
+            lp = self._slice_layers(params, start, size)
+            conv0 = jnp.zeros((size, B, cfg.ssm_conv - 1,
+                               cfg.ssm_d_inner + 2 * cfg.ssm_state), x.dtype)
+            ssm0 = jnp.zeros((size, B, cfg.ssm_nheads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32)
+            x, _, _ = self._mamba_group_prefill(lp, x, conv0, ssm0)
+            if with_attn:
+                impl = "xla_naive" if (self.impl == "xla" and S <= 8192) else self.impl
+                x, _, _ = block_prefill(sab, x, positions, cfg, window=0,
+                                        kv_lens=lens, cache_len=0, impl=impl)
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = (x @ params["lm_head"]).astype(jnp.float32)
+        return layers.cross_entropy_loss(logits, batch["labels"])

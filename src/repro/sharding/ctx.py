@@ -1,0 +1,55 @@
+"""Logical activation-sharding annotations (MaxText-style).
+
+Models call ``constrain(x, "act_btd")`` at a few key points (embedding
+output, layer-scan carry, logits). Outside a mesh context this is a no-op,
+so engine/smoke-test code paths are untouched; the dry-run/launchers
+activate a mapping from logical names to PartitionSpecs.
+
+Why needed: GSPMD's gather heuristic resolves the vocab-sharded embedding
+lookup by replicating the *batch*, which silently un-shards every
+downstream activation (observed as 34 GB/dev attention scores in train_4k).
+One constraint at the embedding output pins the batch axis.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def activate(mapping: dict[str, P]):
+    prev = getattr(_state, "mapping", None)
+    _state.mapping = mapping
+    try:
+        yield
+    finally:
+        _state.mapping = prev
+
+
+def constrain(x, name: str):
+    mapping = getattr(_state, "mapping", None)
+    if not mapping or name not in mapping:
+        return x
+    spec = mapping[name]
+    if spec is None:
+        return x
+    # pad the spec to the array rank (named specs are for the trailing dims)
+    pad = x.ndim - len(spec)
+    if pad < 0:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec, *([None] * pad)))
+
+
+def standard_mapping(batch_axes) -> dict[str, P]:
+    """batch_axes: tuple of mesh axes for the global-batch dim (or None)."""
+    b = batch_axes
+    return {
+        "act_btd": P(b, None, None),   # (batch, seq, d_model)
+        "logits_btv": P(b, None, "model"),
+        "act_bd": P(b, None),
+    }

@@ -1,0 +1,62 @@
+"""Minimal-dependency checkpointing: params/opt-state pytrees -> .npz.
+
+Flat key = "/".join(path). Restores onto a like-structured pytree (shapes
+and dtypes must match), so it composes with sharded params via
+jax.device_get / device_put at the call site."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":  # ml_dtypes (bfloat16): store upcast to f32
+            arr = np.asarray(jnp.asarray(leaf).astype(jnp.float32))
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, params, opt_state=None, step: int | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {f"p:{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update({f"o:{k}": v for k, v in _flatten(opt_state).items()})
+    if step is not None:
+        payload["meta:step"] = np.asarray(step)
+    np.savez(path, **payload)
+
+
+def restore(path: str, params_like, opt_like=None):
+    """Returns (params, opt_state|None, step|None) with ``*_like`` structure."""
+    data = np.load(path)
+
+    def fill(tree, prefix):
+        flat = _flatten(tree)
+        out = {}
+        for k in flat:
+            key = f"{prefix}:{k}"
+            if key not in data:
+                raise KeyError(f"checkpoint missing {key}")
+            if data[key].shape != flat[k].shape:
+                raise ValueError(f"shape mismatch for {key}: "
+                                 f"{data[key].shape} vs {flat[k].shape}")
+            out[k] = data[key]
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = list(_flatten(tree))
+        # cast via jnp: numpy lacks cast kernels for ml_dtypes (bfloat16)
+        return treedef.unflatten(
+            [jnp.asarray(out[k]).astype(l.dtype) for k, l in zip(keys, leaves)])
+
+    params = fill(params_like, "p")
+    opt = fill(opt_like, "o") if opt_like is not None else None
+    step = int(data["meta:step"]) if "meta:step" in data else None
+    return params, opt, step

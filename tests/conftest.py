@@ -1,0 +1,12 @@
+import jax
+import pytest
+
+# Smoke tests and benches run on the single real CPU device; ONLY the
+# dry-run subprocess sets --xla_force_host_platform_device_count=512.
+
+jax.config.update("jax_threefry_partitionable", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,52 @@
+"""Dry-run smoke: one (arch, shape) lowers+compiles per step kind, in a
+subprocess with the 512-device flag (the only place it may be set).
+
+Marked slow-ish (~1 min); the full 40-pair x 2-mesh evidence lives in
+dryrun_*.json (see EXPERIMENTS.md §Dry-run).
+"""
+import json
+import subprocess
+import sys
+
+import pytest
+
+CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch.dryrun import lower_case
+res, _, compiled = lower_case("{arch}", "{shape}")
+assert compiled is not None
+rf = res["roofline"]
+assert rf["hlo_flops_per_device"] > 0
+assert rf["dominant"] in ("compute", "memory", "collective")
+# analytic cross-check: HLO dot flops within 3x of the paper-model flops
+ratio = rf["hlo_flops_cluster"] / max(rf["analytic_flops_cluster"], 1)
+assert 0.2 < ratio < 5.0, ratio
+print(json.dumps({{"ok": True, "dominant": rf["dominant"], "ratio": ratio}}))
+"""
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("tinyllama-1.1b", "decode_32k"),
+    ("rwkv6-1.6b", "long_500k"),
+])
+def test_dryrun_subprocess(arch, shape):
+    out = subprocess.run(
+        [sys.executable, "-c", CODE.format(arch=arch, shape=shape)],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"})
+    assert out.returncode == 0, out.stderr[-2000:]
+    payload = json.loads(out.stdout.strip().splitlines()[-1])
+    assert payload["ok"]
+
+
+def test_mesh_shapes():
+    """Mesh construction logic (without touching global device state)."""
+    from repro.launch.mesh import make_production_mesh  # noqa: F401 import ok
+    # shapes/axes are asserted in the dry-run itself; here just check the
+    # module contract exists with the right signature
+    import inspect
+    sig = inspect.signature(make_production_mesh)
+    assert "multi_pod" in sig.parameters

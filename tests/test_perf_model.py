@@ -1,0 +1,123 @@
+"""Roofline perf model tests (paper §3.3: Tables 2–4, Eq. 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ASSIGNED, get_config
+from repro.core.hardware import TPU_V5E
+from repro.core.perf_model import PerfModel
+
+ARCHS = ["qwen2.5-7b", "mixtral-8x22b", "rwkv6-1.6b", "zamba2-7b",
+         "whisper-tiny", "gemma2-2b", "granite-moe-3b-a800m"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_fast_path_matches_detailed(arch):
+    pm = PerfModel(get_config(arch), TPU_V5E, tp=2)
+    ctx = list(np.random.default_rng(0).integers(1, 8000, 64))
+    fast = pm.decode_estimate(ctx)
+    slow = pm.decode_estimate(ctx, detail=True)
+    assert fast.latency == pytest.approx(slow.latency, rel=1e-9)
+    assert fast.flops == pytest.approx(slow.flops, rel=1e-9)
+    assert fast.bytes == pytest.approx(slow.bytes, rel=1e-9)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_latency_curve_matches_full_estimate(arch):
+    pm = PerfModel(get_config(arch), TPU_V5E)
+    rng = np.random.default_rng(1)
+    base = rng.integers(1, 4000, 16).astype(float)
+    extras = np.sort(rng.integers(1, 4000, 24)).astype(float)
+    curve = pm.decode_latency_curve(base, extras)
+    assert curve.shape == (25,)
+    for k in (0, 7, 24):
+        full = pm.decode_estimate(list(base) + list(extras[:k])).latency
+        assert curve[k] == pytest.approx(full, rel=1e-9)
+    assert np.all(np.diff(curve) >= -1e-12)  # monotone in k
+
+
+def test_eq1_roofline_max():
+    """Eq. 1: op latency = max(flops/F, bytes/M) — both regimes exercised."""
+    pm = PerfModel(get_config("qwen2.5-7b"), TPU_V5E)
+    # decode B=1 is memory-bound; big prefill is compute-bound
+    d1 = pm.decode_estimate([512])
+    assert d1.bottleneck in ("memory", "overhead")
+    p = pm.prefill_estimate([8192])
+    assert p.bottleneck == "compute"
+
+
+def test_decode_flops_about_2N_per_token():
+    cfg = get_config("qwen2.5-7b")
+    pm = PerfModel(cfg, TPU_V5E)
+    est = pm.decode_estimate([128])  # short ctx: attention negligible
+    assert est.flops / (2 * cfg.num_params()) == pytest.approx(1.0, rel=0.15)
+
+
+def test_prefill_flops_about_2N_tokens():
+    cfg = get_config("qwen2.5-7b")
+    pm = PerfModel(cfg, TPU_V5E)
+    S = 2048
+    est = pm.prefill_estimate([S])
+    # ~2*N*S (logits computed for one position only, so slightly below 2*N*S
+    # with the vocab params included in N; attention adds some back)
+    assert est.flops >= 2 * cfg.num_params() * S * 0.75
+    assert est.flops <= 2 * cfg.num_params() * S * 1.5
+
+
+def test_bs_sat_reasonable_and_cached():
+    pm = PerfModel(get_config("qwen2.5-7b"), TPU_V5E)
+    b1 = pm.compute_saturated_batch(1024)
+    b2 = pm.compute_saturated_batch(1024)
+    assert b1 == b2
+    assert 32 <= b1 <= 2048  # paper: ~300 on A100-class hardware
+    # at bs_sat the GEMMs really are compute-bound, below they are not
+    assert pm._gemm_compute_bound(b1, 1024)
+    if b1 > 1:
+        assert not pm._gemm_compute_bound(b1 - 1, 1024)
+
+
+@given(b=st.integers(1, 256), c=st.integers(1, 16000))
+@settings(max_examples=30, deadline=None)
+def test_latency_monotone_in_batch_and_context(b, c):
+    pm = PerfModel(get_config("qwen2.5-7b"), TPU_V5E)
+    l1 = pm.decode_estimate([c] * b).latency
+    l2 = pm.decode_estimate([c] * (b + 1)).latency
+    l3 = pm.decode_estimate([c + 500] * b).latency
+    assert l2 >= l1 - 1e-12
+    assert l3 >= l1 - 1e-12
+
+
+def test_tp_reduces_latency_adds_comm():
+    pm1 = PerfModel(get_config("qwen2.5-7b"), TPU_V5E, tp=1)
+    pm4 = PerfModel(get_config("qwen2.5-7b"), TPU_V5E, tp=4)
+    ctx = [1024] * 64
+    assert pm4.decode_estimate(ctx).latency < pm1.decode_estimate(ctx).latency
+    det = pm4.decode_estimate(ctx, detail=True)
+    assert any(o.kind == "comm" for o in det.ops)
+
+
+def test_kv_bytes_windowed_vs_full():
+    full = PerfModel(get_config("qwen2.5-7b"), TPU_V5E)
+    swa = PerfModel(get_config("mixtral-8x22b"), TPU_V5E)
+    # windowed arch: kv bytes saturate past the window
+    a = swa.kv_bytes([4096])
+    b = swa.kv_bytes([500000])
+    assert b == pytest.approx(a, rel=1e-9)
+    assert full.kv_bytes([8192]) > full.kv_bytes([4096])
+
+
+def test_ssm_state_constant_in_length():
+    pm = PerfModel(get_config("rwkv6-1.6b"), TPU_V5E)
+    assert pm.kv_bytes([100]) == pytest.approx(pm.kv_bytes([500000]))
+    assert pm.kv_bytes_per_token() == 0.0
+    assert pm.state_bytes_fixed() > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_all_archs_estimate(arch):
+    pm = PerfModel(get_config(arch), TPU_V5E)
+    d = pm.decode_estimate([1000] * 8)
+    p = pm.prefill_estimate([1000])
+    assert d.latency > 0 and np.isfinite(d.latency)
+    assert p.latency > 0 and np.isfinite(p.latency)
+    assert d.flops > 0 and p.flops > d.flops / 8  # prefill >> decode per req

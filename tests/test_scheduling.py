@@ -1,0 +1,162 @@
+"""Property-based tests for OOCO's scheduling points (Algorithms 1 & 2)."""
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import scheduling as sch
+from repro.core.hardware import TPU_V5E
+from repro.core.perf_model import PerfModel
+from repro.core.request import Kind, Request
+
+PM = PerfModel(get_config("qwen2.5-7b"), TPU_V5E, tp=4)
+SLO = 0.1
+BUDGET = TPU_V5E.hbm_capacity * 0.9 - PM.weight_bytes()
+
+
+def _reqs(kind, lens):
+    out = []
+    for l in lens:
+        r = Request(kind, 0.0, int(max(l, 1)), 10)
+        out.append(r)
+    return out
+
+
+lens_st = st.lists(st.integers(1, 8000), min_size=0, max_size=40)
+
+
+class TestMixDecoding:
+    @given(on=lens_st, off=lens_st, seed=st.integers(0, 5))
+    @settings(max_examples=60, deadline=None)
+    def test_invariants(self, on, off, seed):
+        online = _reqs(Kind.ONLINE, on)
+        offline = _reqs(Kind.OFFLINE, off)
+        batch = sch.mix_decoding_selection(online, offline, SLO, PM,
+                                           rng=random.Random(seed),
+                                           mem_budget_bytes=BUDGET)
+        # 1) every online request is always included, in order
+        assert batch[: len(online)] == online
+        # 2) no duplicates, all from the candidate set
+        ids = [r.rid for r in batch]
+        assert len(set(ids)) == len(ids)
+        assert set(ids) <= {r.rid for r in online + offline}
+        # 3) if any offline was admitted, predicted latency respects the SLO
+        if len(batch) > len(online):
+            lat = PM.decode_estimate([r.context_len for r in batch]).latency
+            assert lat <= SLO * (1 + 1e-9)
+            assert PM.kv_bytes([r.context_len for r in batch]) <= BUDGET * (1 + 1e-9)
+
+    @given(off=st.lists(st.integers(1, 4000), min_size=1, max_size=30))
+    @settings(max_examples=30, deadline=None)
+    def test_no_online_fills_with_offline(self, off):
+        offline = _reqs(Kind.OFFLINE, off)
+        batch = sch.mix_decoding_selection([], offline, SLO, PM,
+                                           mem_budget_bytes=BUDGET)
+        assert len(batch) >= 1  # SLO is generous enough for at least one
+
+    def test_online_over_slo_excludes_offline(self):
+        # enough very long online requests to exceed the SLO by themselves
+        online = _reqs(Kind.ONLINE, [32768] * 512)
+        offline = _reqs(Kind.OFFLINE, [100] * 10)
+        batch = sch.mix_decoding_selection(online, offline, SLO, PM,
+                                           mem_budget_bytes=None)
+        assert batch == online  # best-effort mode: online only
+
+
+class TestMigration:
+    def _batch(self, n, l=1000):
+        return _reqs(Kind.ONLINE, [l] * n)
+
+    def test_no_headroom_no_migration(self):
+        batch = self._batch(600, 4000)  # way over SLO
+        pref = sch.migration_decision(batch, True, SLO, PM,
+                                      mem_budget_bytes=BUDGET)
+        assert pref is None
+
+    def test_not_all_included_no_migration(self):
+        pref = sch.migration_decision(self._batch(4), False, SLO, PM,
+                                      mem_budget_bytes=BUDGET)
+        assert pref is None
+
+    def test_small_batch_prefers_reaching_saturation(self):
+        batch = self._batch(4, 200)
+        pref = sch.migration_decision(batch, True, SLO, PM,
+                                      mem_budget_bytes=BUDGET)
+        assert pref is not None
+        assert pref.mode in ("bounded", "shortest")
+        if pref.mode == "bounded":
+            assert pref.count >= 1
+
+    def test_saturated_batch_prefers_longest(self):
+        bs_sat = PM.compute_saturated_batch(500)
+        batch = self._batch(bs_sat + 10, 500)
+        pref = sch.migration_decision(batch, True, 10.0, PM,  # generous SLO
+                                      mem_budget_bytes=BUDGET * 100)
+        assert pref is not None and pref.mode == "longest"
+        assert pref.target_len >= 1
+
+    @given(n=st.integers(1, 50), l=st.integers(100, 4000))
+    @settings(max_examples=20, deadline=None)
+    def test_preference_respects_slo(self, n, l):
+        batch = self._batch(n, l)
+        pref = sch.migration_decision(batch, True, SLO, PM,
+                                      mem_budget_bytes=BUDGET)
+        if pref is None or pref.mode == "shortest":
+            return
+        ctx = [r.context_len for r in batch] + [pref.target_len] * (
+            pref.count if pref.mode == "bounded" else 1)
+        assert PM.decode_estimate(ctx).latency <= SLO * (1 + 1e-6)
+
+
+class TestEviction:
+    def test_compute_bound_evicts_longest(self):
+        reqs = _reqs(Kind.OFFLINE, [100, 5000, 300, 2000])
+        v = sch.select_eviction_victims(reqs, 4000, "compute")
+        assert v[0].context_len == 5000  # few long victims
+
+    def test_memory_bound_evicts_shortest(self):
+        reqs = _reqs(Kind.OFFLINE, [100, 5000, 300, 2000])
+        v = sch.select_eviction_victims(reqs, 350, "memory")
+        assert [r.context_len for r in v] == [100, 300]
+
+    @given(lens=st.lists(st.integers(1, 5000), min_size=1, max_size=20),
+           need=st.integers(1, 20000),
+           bn=st.sampled_from(["compute", "memory", "balanced"]))
+    @settings(max_examples=40, deadline=None)
+    def test_frees_enough_or_everything(self, lens, need, bn):
+        reqs = _reqs(Kind.OFFLINE, lens)
+        v = sch.select_eviction_victims(reqs, need, bn)
+        freed = sum(r.context_len for r in v)
+        assert freed >= min(need, sum(lens)) or len(v) == len(reqs)
+
+
+class TestGating:
+    def test_idle_node_always_prefills(self):
+        cand = Request(Kind.OFFLINE, 0.0, 1000, 100)
+        assert sch.gating_decision(cand, [], PM, evict_probability=1.0,
+                                   horizon_seconds=10.0,
+                                   mem_budget_bytes=BUDGET)
+
+    def test_memory_full_rejects(self):
+        cand = Request(Kind.OFFLINE, 0.0, 1000, 100)
+        cur = _reqs(Kind.OFFLINE, [1000] * 8)
+        assert not sch.gating_decision(cand, cur, PM, evict_probability=0.0,
+                                       horizon_seconds=10.0,
+                                       mem_budget_bytes=1.0)
+
+    def test_monotone_in_eviction_risk(self):
+        """Higher eviction probability can only flip accept -> reject."""
+        cand = Request(Kind.OFFLINE, 0.0, 2000, 100)
+        cur = _reqs(Kind.OFFLINE, [1500] * 16)
+        results = [sch.gating_decision(cand, cur, PM, evict_probability=p,
+                                       horizon_seconds=5.0,
+                                       mem_budget_bytes=BUDGET)
+                   for p in (0.0, 0.25, 0.5, 0.75, 1.0)]
+        # once it flips to False it stays False
+        flipped = False
+        for r in results:
+            if flipped:
+                assert not r
+            flipped = flipped or (not r)

@@ -1,0 +1,80 @@
+"""Cluster-simulator invariants + directional policy behaviour."""
+import pytest
+
+from repro.cluster.simulator import SimConfig, Simulator
+from repro.configs import get_config
+from repro.core.hardware import TPU_V5E
+from repro.data import traces as tr
+
+CFG = get_config("qwen2.5-7b")
+
+
+def _sim(policy, duration=60.0, seed=0):
+    return Simulator(CFG, TPU_V5E, policy, SimConfig(duration=duration, tp=4,
+                                                     seed=seed))
+
+
+@pytest.fixture(scope="module")
+def light_traces():
+    online = tr.online_trace("ooc", duration=60.0, mean_qps=1.0, seed=0)
+    offline = tr.with_uniform_qps(tr.offline_requests(200, seed=1), 2.0)
+    return online, offline
+
+
+@pytest.mark.parametrize("policy", ["base_pd", "online_priority", "ooco"])
+def test_invariants(policy, light_traces):
+    online, offline = light_traces
+    m = _sim(policy).run(online, offline)
+    assert 0.0 <= m["online_violation_rate"] <= 1.0
+    assert m["offline_tokens"] >= 0
+    assert m["offline_completed"] * 1 <= m["offline_tokens"] + 1
+    assert m["online_requests"] == len(online)
+
+
+def test_no_offline_means_zero_offline_tokens(light_traces):
+    online, _ = light_traces
+    m = _sim("ooco").run(online, [])
+    assert m["offline_tokens"] == 0
+    assert m["online_violation_rate"] <= 0.05  # light load: SLO easily met
+
+
+def test_light_load_all_policies_meet_slo(light_traces):
+    online, offline = light_traces
+    for policy in ("base_pd", "online_priority", "ooco"):
+        m = _sim(policy).run(online, offline)
+        assert m["online_violation_rate"] <= 0.05, (policy, m)
+        assert m["offline_tokens"] > 0
+
+
+def test_heavy_offline_breaks_base_pd_not_ooco():
+    """The paper's core claim, directionally: under heavy offline load,
+    base P/D violates online SLOs while OOCO keeps them."""
+    online = tr.online_trace("ooc", duration=90.0, mean_qps=3.0, seed=0)
+    offline = tr.with_uniform_qps(tr.offline_requests(4000, seed=1), 24.0)
+    base = _sim("base_pd", 90.0).run(online, offline)
+    ooco = _sim("ooco", 90.0).run(online, offline)
+    assert base["online_violation_rate"] > 0.03
+    assert ooco["online_violation_rate"] <= 0.03
+    assert ooco["offline_tokens"] > 0
+
+
+def test_ooco_offline_throughput_monotone_capped():
+    """More offered offline load never reduces OOCO's online compliance."""
+    online = tr.online_trace("ooc", duration=60.0, mean_qps=2.0, seed=0)
+    pool = tr.offline_requests(3000, seed=1)
+    v_prev = None
+    for qps in (2.0, 16.0):
+        m = _sim("ooco").run(online, tr.with_uniform_qps(pool, qps))
+        assert m["online_violation_rate"] <= 0.03
+        v_prev = m
+
+
+def test_migration_and_eviction_accounting():
+    online = tr.online_trace("ooc", duration=90.0, mean_qps=4.0, seed=2)
+    offline = tr.with_uniform_qps(tr.offline_requests(2000, seed=3), 16.0)
+    sim = _sim("ooco", 90.0)
+    sim.run(online, offline)
+    # strict instances only ever hold decode-phase requests
+    for inst in sim.strict:
+        for r in inst.resident.values():
+            assert r.phase.value in ("decoding",)

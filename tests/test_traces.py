@@ -1,0 +1,56 @@
+"""Trace synthesis (Table 5 statistics) and §5.1.3 scaling invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import traces as tr
+
+
+@pytest.mark.parametrize("ds,key", [("ooc", "ooc_online"),
+                                    ("azure_conv", "azure_conv"),
+                                    ("azure_code", "azure_code")])
+def test_table5_length_statistics(ds, key):
+    t = tr.online_trace(ds, duration=1200, mean_qps=4.0, seed=0)
+    s = tr.trace_stats(t)
+    want_p, want_o = tr.DATASET_STATS[key]
+    assert s["avg_prompt"] == pytest.approx(want_p, rel=0.15)
+    assert s["avg_output"] == pytest.approx(want_o, rel=0.20)
+    assert s["mean_qps"] == pytest.approx(4.0, rel=0.25)
+
+
+def test_burstiness_present():
+    t = tr.online_trace("ooc", duration=1200, mean_qps=4.0, seed=0)
+    s = tr.trace_stats(t)
+    assert s["peak_over_mean"] > 1.5  # Fig. 1: bursty spikes exist
+
+
+def test_arrivals_sorted_and_within_duration():
+    t = tr.online_trace("ooc", duration=300, mean_qps=2.0, seed=1)
+    ts = [r.arrival for r in t]
+    assert ts == sorted(ts)
+    assert 0 <= ts[0] and ts[-1] <= 300.0
+
+
+@given(factor=st.sampled_from([0.25, 0.5, 2.0, 3.0]))
+@settings(max_examples=8, deadline=None)
+def test_scaling_changes_rate_preserves_pattern(factor):
+    base = tr.online_trace("ooc", duration=900, mean_qps=4.0, seed=0)
+    scaled = tr.scale_trace(base, factor, seed=0)
+    s0, s1 = tr.trace_stats(base), tr.trace_stats(scaled)
+    assert s1["mean_qps"] / s0["mean_qps"] == pytest.approx(factor, rel=0.15)
+    # temporal pattern (burst ratio) preserved within tolerance
+    assert s1["peak_over_mean"] / s0["peak_over_mean"] == pytest.approx(1.0, rel=0.35)
+    # lengths distribution preserved
+    assert s1["avg_prompt"] == pytest.approx(s0["avg_prompt"], rel=0.15)
+
+
+def test_uniform_qps_spacing():
+    reqs = tr.offline_requests(100, seed=0)
+    placed = tr.with_uniform_qps(reqs, 4.0)
+    gaps = np.diff([r.arrival for r in placed])
+    assert np.allclose(gaps, 0.25)
+
+
+def test_scale_one_is_identity():
+    base = tr.online_trace("ooc", duration=100, mean_qps=1.0, seed=0)
+    assert tr.scale_trace(base, 1.0) == base

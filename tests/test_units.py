@@ -1,0 +1,187 @@
+"""Unit tests: mamba2 chunked-vs-sequential oracle, MoE dispatch vs dense
+reference, HLO analysis trip counting, flash-xla vs naive, training loop."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import mamba2, moe as moe_lib
+from repro.models.attention import flash_attention_xla, naive_attention_xla
+
+
+class TestMamba2:
+    @pytest.mark.parametrize("S", [16, 48, 37])  # incl. non-chunk-multiple
+    def test_chunked_matches_sequential(self, S, rng):
+        cfg = get_config("zamba2-7b").reduced()
+        p = mamba2.init_mamba(rng, cfg)
+        u = jax.random.normal(jax.random.fold_in(rng, 1), (2, S, cfg.d_model),
+                              jnp.bfloat16)
+        y1, (c1, s1) = mamba2.mamba_prefill(p, u, cfg)
+        y2, (c2, s2) = mamba2.mamba_ref_scan(p, u, cfg)
+        np.testing.assert_allclose(np.asarray(y1, np.float32),
+                                   np.asarray(y2, np.float32), atol=3e-2)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-3)
+        np.testing.assert_allclose(np.asarray(c1, np.float32),
+                                   np.asarray(c2, np.float32), atol=1e-3)
+
+    def test_padding_is_state_transparent(self, rng):
+        """Trailing padding (dt=0) must not change the carried state."""
+        cfg = get_config("zamba2-7b").reduced()
+        p = mamba2.init_mamba(rng, cfg)
+        u = jax.random.normal(jax.random.fold_in(rng, 2), (1, 19, cfg.d_model),
+                              jnp.bfloat16)
+        _, (c1, s1) = mamba2.mamba_prefill(p, u, cfg)       # pads 19 -> 32
+        _, (c2, s2) = mamba2.mamba_ref_scan(p, u, cfg)      # no padding
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-3)
+
+
+class TestRWKV6:
+    @pytest.mark.parametrize("S", [8, 32, 45])  # incl. non-chunk-multiple
+    def test_chunked_wkv_matches_scan(self, S, rng):
+        from repro.models import rwkv6
+        B, H, K = 2, 3, 16
+        ks = jax.random.split(rng, 5)
+        r = jax.random.normal(ks[0], (B, S, H, K))
+        k = jax.random.normal(ks[1], (B, S, H, K))
+        v = jax.random.normal(ks[2], (B, S, H, K))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, K))) * 0.5 + 0.45
+        u = jax.random.normal(ks[4], (H, K)) * 0.1
+        s0 = jax.random.normal(jax.random.fold_in(rng, 9), (B, H, K, K)) * 0.1
+        y1, st1 = rwkv6._wkv_scan(r, k, v, w, u, s0)
+        y2, st2 = rwkv6._wkv_chunked(r, k, v, w, u, s0, chunk=16)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(st1), np.asarray(st2),
+                                   atol=1e-4, rtol=1e-4)
+
+
+class TestMoE:
+    @given(B=st.integers(1, 4), S=st.sampled_from([4, 8, 16]),
+           groups=st.sampled_from([1, 2, 4]))
+    @settings(max_examples=15, deadline=None)
+    def test_capacity_dispatch_matches_dense(self, B, S, groups):
+        cfg = dataclasses.replace(get_config("mixtral-8x22b").reduced(),
+                                  moe_capacity_factor=8.0)  # no drops
+        p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                              jnp.float32)
+        out, aux = moe_lib.moe_mlp(p, x, cfg, groups=groups)
+        ref = moe_lib.moe_ref(p, x, cfg)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-3, rtol=2e-2)
+        assert np.isfinite(float(aux))
+
+    def test_capacity_drops_dont_nan(self):
+        cfg = dataclasses.replace(get_config("granite-moe-3b-a800m").reduced(),
+                                  moe_capacity_factor=0.5)  # force drops
+        p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                              jnp.bfloat16)
+        out, _ = moe_lib.moe_mlp(p, x, cfg, groups=2)
+        assert not np.any(np.isnan(np.asarray(out, np.float32)))
+
+
+class TestFlashXLA:
+    @given(Sq=st.sampled_from([64, 100]), window=st.sampled_from([0, 32]),
+           cap=st.sampled_from([0.0, 30.0]))
+    @settings(max_examples=12, deadline=None)
+    def test_flash_matches_naive(self, Sq, window, cap):
+        rng = jax.random.PRNGKey(0)
+        q = jax.random.normal(rng, (2, Sq, 4, 32))
+        k = jax.random.normal(jax.random.fold_in(rng, 1), (2, Sq, 2, 32))
+        v = jax.random.normal(jax.random.fold_in(rng, 2), (2, Sq, 2, 32))
+        a = flash_attention_xla(q, k, v, window=window, logit_softcap=cap,
+                                kv_block=32)
+        b = naive_attention_xla(q, k, v, window=window, logit_softcap=cap)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+class TestHloAnalysis:
+    def test_scan_trip_count_correction(self):
+        from repro.launch.hlo_analysis import analyze
+
+        def f(x, ws):
+            def body(c, w):
+                return jnp.dot(c, w), None
+            return jax.lax.scan(body, x, ws)[0]
+
+        x = jax.ShapeDtypeStruct((64, 128), jnp.bfloat16)
+        ws = jax.ShapeDtypeStruct((5, 128, 128), jnp.bfloat16)
+        comp = jax.jit(f).lower(x, ws).compile()
+        res = analyze(comp.as_text())
+        assert res["dot_flops_per_device"] == pytest.approx(
+            5 * 2 * 64 * 128 * 128, rel=1e-6)
+
+    def test_nested_scan(self):
+        from repro.launch.hlo_analysis import analyze
+
+        def f(x, ws):
+            def outer(c, w):
+                def inner(c2, _):
+                    return jnp.dot(c2, w), None
+                return jax.lax.scan(inner, c, None, length=3)[0], None
+            return jax.lax.scan(outer, x, ws)[0]
+
+        x = jax.ShapeDtypeStruct((32, 64), jnp.bfloat16)
+        ws = jax.ShapeDtypeStruct((4, 64, 64), jnp.bfloat16)
+        comp = jax.jit(f).lower(x, ws).compile()
+        res = analyze(comp.as_text())
+        assert res["dot_flops_per_device"] == pytest.approx(
+            4 * 3 * 2 * 32 * 64 * 64, rel=1e-6)
+
+
+class TestTraining:
+    def test_loss_decreases_and_checkpoint_roundtrips(self, rng, tmp_path):
+        from repro.training import checkpoint as ckpt
+        from repro.training.data_pipeline import DataConfig, packed_batches
+        from repro.training.optimizer import AdamWConfig
+        from repro.training.train_loop import train
+        from repro.models.model import build_model
+
+        cfg = get_config("tinyllama-1.1b").reduced()
+        model = build_model(cfg, remat=True)
+        params = model.init(rng)
+        dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, batch_size=4)
+        params2, opt, hist = train(
+            model, params, packed_batches(dc, 25),
+            AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=25), log_every=24)
+        assert hist[-1][1] < hist[0][1]
+        path = str(tmp_path / "ck.npz")
+        ckpt.save(path, params2, opt, step=25)
+        rp, ro, step = ckpt.restore(path, params2, opt)
+        assert step == 25
+        for a, b in zip(jax.tree.leaves(params2), jax.tree.leaves(rp)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_grad_accum_matches_single_batch(self, rng):
+        from repro.training.optimizer import AdamWConfig, init_opt_state
+        from repro.training.train_loop import make_train_step
+        from repro.models.model import build_model
+
+        cfg = get_config("tinyllama-1.1b").reduced()
+        model = build_model(cfg, remat=False)
+        params = model.init(rng)
+        tokens = jax.random.randint(rng, (4, 32), 0, cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": tokens}
+        oc = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+        s1 = jax.jit(make_train_step(model, oc, microbatches=1))
+        s2 = jax.jit(make_train_step(model, oc, microbatches=2))
+        p1, _, m1 = s1(params, init_opt_state(params), batch)
+        p2, _, m2 = s2(params, init_opt_state(params), batch)
+        assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=2e-2)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32), atol=2e-2)
+
+    def test_lr_schedule(self):
+        from repro.training.optimizer import AdamWConfig, lr_at
+        oc = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                         min_lr_ratio=0.1)
+        assert float(lr_at(oc, 0)) == 0.0
+        assert float(lr_at(oc, 10)) == pytest.approx(1e-3)
+        assert float(lr_at(oc, 100)) == pytest.approx(1e-4, rel=1e-2)
