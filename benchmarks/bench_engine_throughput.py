@@ -23,12 +23,12 @@ from repro.models.model import build_model
 
 
 def run_engine_throughput(arch="qwen2.5-7b", n_requests=24, prompt_len=64,
-                          output_len=32, seed=0, verbose=True):
+                          output_len=32, seed=0, verbose=True, backend="auto"):
     cfg = get_config(arch).reduced(layers=4, d_model=512, vocab=4096, d_ff=1536)
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(seed))
     eng = ServingEngine(model, params, num_pages=1024, page_size=16,
-                        decode_buckets=(8, 16, 32))
+                        decode_buckets=(8, 16, 32), backend=backend)
     rng = np.random.RandomState(seed)
     reqs = []
     for _ in range(n_requests):

@@ -64,6 +64,19 @@ def bench_engine_throughput(quick=False):
          f"v5e_projected={r['v5e_projected_decode_tokens_per_s']:.0f}tok/s")
 
 
+def bench_decode_hotpath(quick=False):
+    """Zero-copy decode hot path: steps/s, host overhead, donation proof."""
+    from benchmarks.bench_decode_hotpath import run_decode_hotpath
+    t0 = time.perf_counter()
+    r = run_decode_hotpath(steps=10 if quick else 30, verbose=not quick)
+    _row("decode_hotpath", (time.perf_counter() - t0) * 1e6,
+         f"steps_per_s={r['steps_per_s']:.1f} "
+         f"host_overhead_ms={r['host_overhead_ms_per_step']:.2f} "
+         f"donated={r['decode_donated_args']} "
+         f"pool_copies={r['decode_full_pool_copies']}"
+         f"+{r['prefill_full_pool_copies']} backend={r['backend']}")
+
+
 def bench_colocation(quick=False):
     from benchmarks.bench_colocation import run_colocation, summarize
     t0 = time.perf_counter()
@@ -122,6 +135,7 @@ BENCHES = {
     "roofline_scatter": bench_roofline_scatter,
     "kernels": bench_kernels,
     "engine_throughput": bench_engine_throughput,
+    "decode_hotpath": bench_decode_hotpath,
     "perfmodel_accuracy": bench_perfmodel_accuracy,
     "colocation": bench_colocation,
     "pool_ratio": bench_pool_ratio,

@@ -16,12 +16,38 @@ two mechanisms are implemented for real, not simulated:
 Decode batches are padded to bucket sizes (TPU/XLA static shapes, DESIGN §3).
 Supported families here: dense + MoE with a single attention window (the
 cluster-scale behaviour of every family is exercised via the simulator).
+
+Engine hot path & attention backends
+------------------------------------
+The per-iteration hot path is allocation- and sync-free:
+
+* ``backend="auto"|"pallas"|"interpret"|"ref"`` selects the attention
+  implementation everywhere (prefill flash + paged decode attention).
+  ``auto`` resolves to the Pallas TPU kernels when a TPU is attached and to
+  the XLA/jnp reference path on CPU; ``interpret`` runs the Pallas kernel
+  bodies on any backend (parity/debug). Threaded through ``CoLocatedServer``
+  and ``launch.serve --backend``.
+* ``k_pool``/``v_pool`` are **donated** through the jitted decode step and
+  through the prefill KV scatter, so XLA writes the paged pools in place
+  instead of copying the full (L, num_pages, page, Hkv, hd) arrays every
+  iteration. Prefill buffers each layer's K/V and lands the whole prefill
+  in a single donated scatter (one more at each preemption point).
+* Sampling (greedy, or temperature/top-k via ``SamplingParams`` /
+  ``set_sampling``) runs **inside** the jitted decode step — only the (B,)
+  next-token ids cross the device boundary, never (B, vocab) logits.
+* Per-layer parameters are pre-sliced once at construction; per-step token
+  bookkeeping uses preallocated numpy rings (``TokenRing``), not Python
+  lists.
+
+``benchmarks/bench_decode_hotpath.py`` measures steps/s and host overhead
+per step and verifies pool donation from the lowered HLO;
+``BENCH_engine.json`` records the baseline→after throughput trajectory.
 """
 from __future__ import annotations
 
 import functools
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable
 
 import jax
@@ -29,17 +55,94 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.perf_model import PerfModel
-from repro.core.request import Kind, Phase, Request
+from repro.core.request import Phase, Request
 from repro.engine.kv_cache import PagedKVCache
+from repro.kernels import backend_flags, resolve_backend
 from repro.kernels.paged_attention.ops import paged_attention
 from repro.models import attention, layers, moe as moe_lib
-from repro.models.config import ModelConfig
+from repro.models.attention import impl_for_backend
 from repro.models.transformer import Transformer, _norm
 
 
 @dataclass
+class SamplingParams:
+    """Engine-default sampling. ``temperature <= 0`` means greedy; ``top_k``
+    0 keeps the full vocab. Per-request overrides via ``set_sampling``."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+
+def sample_tokens(logits, key, temps, top_ks):
+    """On-device sampler: greedy rows where temps <= 0, temperature/top-k
+    elsewhere. logits (B, V) f32; temps (B,) f32; top_ks (B,) int32
+    (0 = full vocab). Returns (B,) int32 token ids."""
+    V = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    srt = jnp.sort(logits, axis=-1)[:, ::-1]
+    k_eff = jnp.clip(jnp.where(top_ks > 0, top_ks, V), 1, V)
+    thresh = jnp.take_along_axis(srt, (k_eff - 1)[:, None], axis=-1)
+    masked = jnp.where(logits >= thresh, logits, -jnp.inf)
+    scaled = masked / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
+class TokenRing:
+    """Preallocated int32 token buffer (prompt + generated) with list-like
+    reads. Appends write into preallocated storage (amortized O(1), no
+    per-token Python list growth); capacity doubles if exceeded."""
+
+    __slots__ = ("_buf", "_n")
+
+    def __init__(self, tokens, capacity: int = 0):
+        tokens = np.asarray(list(tokens), np.int32)
+        cap = max(capacity, tokens.shape[0], 8)
+        self._buf = np.empty(cap, np.int32)
+        self._buf[: tokens.shape[0]] = tokens
+        self._n = tokens.shape[0]
+
+    def append(self, tok: int) -> None:
+        if self._n == self._buf.shape[0]:
+            grown = np.empty(self._buf.shape[0] * 2, np.int32)
+            grown[: self._n] = self._buf
+            self._buf = grown
+        self._buf[self._n] = tok
+        self._n += 1
+
+    def tolist(self) -> list[int]:
+        return self._buf[: self._n].tolist()
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return self._buf[: self._n][i].tolist()
+        n = self._n
+        if not -n <= i < n:
+            raise IndexError(i)
+        return int(self._buf[i % n if i < 0 else i])
+
+    def __iter__(self):
+        return iter(self.tolist())
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, TokenRing):
+            return self.tolist() == other.tolist()
+        if isinstance(other, (list, tuple)):
+            return self.tolist() == list(other)
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return f"TokenRing({self.tolist()})"
+
+
+@dataclass
 class PartialPrefill:
-    """State of a layer-interrupted prefill (resume token)."""
+    """State of a layer-interrupted prefill (resume token). KV of completed
+    layers is already flushed to the paged pool (one donated scatter per
+    interruption segment)."""
     rid: int
     x: jnp.ndarray            # hidden after `layer` layers, (1, S, d)
     layer: int                # layers completed
@@ -60,7 +163,8 @@ class EngineStats:
 class ServingEngine:
     def __init__(self, model: Transformer, params, *, num_pages: int = 512,
                  page_size: int = 16, decode_buckets: tuple[int, ...] = (1, 2, 4, 8, 16, 32),
-                 perf_model: PerfModel | None = None):
+                 perf_model: PerfModel | None = None, backend: str = "auto",
+                 sampling: SamplingParams | None = None):
         cfg = model.cfg
         assert not cfg.local_global and not cfg.sliding_window, \
             "engine supports full-attention archs (cluster-scale behaviour of " \
@@ -68,31 +172,60 @@ class ServingEngine:
         self.model = model
         self.cfg = cfg
         self.params = params
+        self.backend = resolve_backend(backend)
+        self.sampling = sampling or SamplingParams()
         self.cache = PagedKVCache(cfg, num_pages, page_size)
         self.decode_buckets = tuple(sorted(decode_buckets))
         self.perf_model = perf_model
         self.requests: dict[int, Request] = {}
-        self.token_buf: dict[int, list[int]] = {}   # prompt + generated tokens
+        self.token_buf: dict[int, TokenRing] = {}   # prompt + generated tokens
         self.partial: dict[int, PartialPrefill] = {}
+        self.req_sampling: dict[int, tuple[float, int]] = {}
         self.stats = EngineStats()
         self._layer_fn = self._build_layer_fn()
         self._embed_fn = jax.jit(lambda p, t: model._embed(p, t))
         self._logits_fn = jax.jit(lambda p, x: model._logits(p, x))
+        self._sample_fn = jax.jit(sample_tokens)
         self._decode_fns: dict[tuple[int, int], Callable] = {}
+        # per-layer params sliced once (not jax.tree.map per layer per prefill)
+        self._layer_params_cached = [
+            jax.tree.map(lambda a, i=i: a[i], params["layers"])
+            for i in range(cfg.num_layers)]
+        self._base_key = jax.random.PRNGKey(self.sampling.seed)
+        self._sample_step = 0
+
+    # ------------------------------------------------------------------
+    # sampling
+    # ------------------------------------------------------------------
+    def set_sampling(self, rid: int, temperature: float, top_k: int = 0) -> None:
+        """Per-request override of the engine-default sampling params."""
+        self.req_sampling[rid] = (temperature, top_k)
+
+    def _sampling_arrays(self, rids: list[int], pad_to: int):
+        d = (self.sampling.temperature, self.sampling.top_k)
+        temps = np.zeros(pad_to, np.float32)
+        topks = np.zeros(pad_to, np.int32)
+        for i, r in enumerate(rids):
+            temps[i], topks[i] = self.req_sampling.get(r, d)
+        return temps, topks
+
+    def _next_key(self):
+        self._sample_step += 1
+        return self._base_key, np.int32(self._sample_step)
 
     # ------------------------------------------------------------------
     # layer-interruptible prefill
     # ------------------------------------------------------------------
     def _build_layer_fn(self):
         cfg = self.cfg
-        model = self.model
+        impl = impl_for_backend(self.backend)
 
         @jax.jit
         def layer_fn(lp, x, positions):
             h = _norm(cfg, lp["ln1"], x)
             a, (k, v) = attention.attn_prefill(
                 lp["attn"], h, positions, cfg, window=cfg.sliding_window,
-                impl="xla")
+                impl=impl)
             if cfg.use_post_norm:
                 a = _norm(cfg, lp["post_ln1"], a)
             x = x + a
@@ -108,12 +241,19 @@ class ServingEngine:
         return layer_fn
 
     def _layer_params(self, i: int):
-        return jax.tree.map(lambda a: a[i], self.params["layers"])
+        return self._layer_params_cached[i]
 
     def add_request(self, req: Request, prompt_tokens: list[int]) -> None:
         assert len(prompt_tokens) == req.prompt_len
         self.requests[req.rid] = req
-        self.token_buf[req.rid] = list(prompt_tokens)
+        self.token_buf[req.rid] = TokenRing(
+            prompt_tokens, capacity=req.prompt_len + req.output_len + 8)
+
+    def _flush_prefill_kv(self, rid: int, start_layer: int, ks, vs) -> None:
+        """Land buffered per-layer K/V in one donated scatter."""
+        if ks:
+            self.cache.write_prefill_layers(
+                rid, start_layer, jnp.stack(ks), jnp.stack(vs))
 
     def prefill(self, rid: int, *, should_preempt: Callable[[], bool] | None = None,
                 max_new_pages: bool = True) -> str:
@@ -133,18 +273,28 @@ class ServingEngine:
         S = tokens.shape[0]
         positions = jnp.arange(S)[None]
         req.phase = Phase.PREFILLING
+        ks, vs = [], []   # per-layer KV buffered; flushed once per segment
         for li in range(start_layer, cfg.num_layers):
             x, k, v = self._layer_fn(self._layer_params(li), x, positions)
-            self.cache.write_prefill_layer(rid, li, k[0], v[0])
+            ks.append(k[0])
+            vs.append(v[0])
             req.prefill_layers_done = li + 1
             if should_preempt is not None and li < cfg.num_layers - 1 and should_preempt():
+                self._flush_prefill_kv(rid, start_layer, ks, vs)
                 self.partial[rid] = PartialPrefill(rid, x, li + 1, tokens)
                 self.stats.preemptions += 1
                 self.stats.prefill_seconds += time.perf_counter() - t0
                 return "preempted"
-        # first token from the last hidden state
+        self._flush_prefill_kv(rid, start_layer, ks, vs)
+        # first token from the last hidden state, sampled on device
         logits = self._logits_fn(self.params, x[:, -1])
-        nxt = int(jnp.argmax(logits, -1)[0])
+        temps, topks = self._sampling_arrays([rid], 1)
+        if temps[0] > 0:
+            key, step = self._next_key()
+            nxt = int(self._sample_fn(logits, jax.random.fold_in(key, step),
+                                      jnp.asarray(temps), jnp.asarray(topks))[0])
+        else:
+            nxt = int(jnp.argmax(logits, -1)[0])
         self.token_buf[rid].append(nxt)
         req.generated = 1
         req.phase = Phase.DECODING
@@ -170,36 +320,65 @@ class ServingEngine:
                 return b
         return self.decode_buckets[-1]
 
-    def _decode_fn(self, bucket: int, pages: int):
-        key = (bucket, pages)
+    @staticmethod
+    def pad_pages(pages: int) -> int:
+        """Pad a decode batch's page dimension to a power of two — bounds the
+        set of (bucket, pages) jit variants. Shared with the benchmarks."""
+        return 1 << (pages - 1).bit_length()
+
+    def _decode_fn(self, bucket: int, pages: int, sampled: bool = False):
+        """``sampled=False`` specializes the step to plain argmax — the
+        all-greedy default never pays the sampler's full-vocab sort."""
+        key = (bucket, pages, sampled)
         if key in self._decode_fns:
             return self._decode_fns[key]
         cfg = self.cfg
         model = self.model
+        use_ref, interpret = backend_flags(self.backend)
 
-        @jax.jit
-        def step(params, tokens, positions, tables, lengths, k_pool, v_pool):
+        @functools.partial(jax.jit, donate_argnums=(5, 6))
+        def step(params, tokens, positions, tables, lengths, k_pool, v_pool,
+                 key, sample_step, temps, top_ks):
             x = model._embed(params, tokens[:, None])
             hd = cfg.head_dim_
+            page_ids = jnp.take_along_axis(
+                tables, (positions // self.cache.page_size)[:, None], axis=1)[:, 0]
+            offs = positions % self.cache.page_size
 
-            def body(x, inp):
-                lp, kp, vp = inp
+            # The pools ride in the scan CARRY (not xs/ys): per-layer writes
+            # are dynamic-update-slices into the carried buffer, which XLA
+            # keeps in place inside the loop and aliases to the donated
+            # inputs — the xs/ys formulation forced a full-pool copy per
+            # step because ys are always freshly stacked.
+            def body(carry, inp):
+                x, kpool, vpool = carry
+                lp, li = inp
                 h = _norm(cfg, lp["ln1"], x)
                 k_new, v_new = attention.project_kv_for_cache(lp["attn"], h, positions, cfg)
-                page_ids = jnp.take_along_axis(
-                    tables, (positions // self.cache.page_size)[:, None], axis=1)[:, 0]
-                offs = positions % self.cache.page_size
-                kp = kp.at[page_ids, offs].set(k_new[:, 0].astype(kp.dtype))
-                vp = vp.at[page_ids, offs].set(v_new[:, 0].astype(vp.dtype))
+                # round through cfg dtype, then store in the pool's storage
+                # dtype (f32 on CPU — see PagedKVCache) for bit-parity with
+                # the native-dtype pool layout
+                kpool = kpool.at[li, page_ids, offs].set(
+                    k_new[:, 0].astype(cfg.jnp_dtype).astype(kpool.dtype))
+                vpool = vpool.at[li, page_ids, offs].set(
+                    v_new[:, 0].astype(cfg.jnp_dtype).astype(vpool.dtype))
                 q = layers.dense(lp["attn"]["wq"], h[:, 0]).reshape(
                     -1, cfg.num_heads, hd)
                 if cfg.qk_norm:
                     q = layers.rmsnorm(lp["attn"]["q_norm"], q, cfg.norm_eps)
                 q = layers.apply_rope(q[:, None], positions[:, None], cfg.rope_theta)[:, 0]
-                a = paged_attention(q, kp, vp, tables, lengths,
+                # compact the layer's KV to just this batch's pages: a gather
+                # of B*P pages (+ renumbered tables) instead of slicing the
+                # full num_pages pool out of the carried buffer per layer
+                B, P = tables.shape
+                page = kpool.shape[2]
+                comp_k = kpool[li, tables].reshape(B * P, page, *kpool.shape[3:])
+                comp_v = vpool[li, tables].reshape(B * P, page, *vpool.shape[3:])
+                local_tables = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P)
+                a = paged_attention(q, comp_k, comp_v, local_tables, lengths,
                                     num_kv_heads=cfg.num_kv_heads,
                                     logit_softcap=cfg.attn_logit_softcap,
-                                    use_ref=True)
+                                    use_ref=use_ref, interpret=interpret)
                 a = layers.dense(lp["attn"]["wo"], a.reshape(a.shape[0], 1, -1))
                 if cfg.use_post_norm:
                     a = _norm(cfg, lp["post_ln1"], a)
@@ -211,50 +390,67 @@ class ServingEngine:
                     m = layers.mlp(lp["mlp"], h, cfg.mlp_act)
                 if cfg.use_post_norm:
                     m = _norm(cfg, lp["post_ln2"], m)
-                return x + m, (kp, vp)
+                return (x + m, kpool, vpool), None
 
-            x, (k_pool, v_pool) = jax.lax.scan(body, x, (params["layers"], k_pool, v_pool))
+            (x, k_pool, v_pool), _ = jax.lax.scan(
+                body, (x, k_pool, v_pool),
+                (params["layers"], jnp.arange(cfg.num_layers)))
             logits = model._logits(params, x[:, 0])
-            return logits, k_pool, v_pool
+            if sampled:
+                nxt = sample_tokens(logits, jax.random.fold_in(key, sample_step),
+                                    temps, top_ks)
+            else:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, k_pool, v_pool
 
         self._decode_fns[key] = step
         return step
 
     def decode_step(self, rids: list[int]) -> dict[int, int]:
-        """One continuous-batching decode iteration for the given requests.
-        Returns rid -> new token."""
+        """One continuous-batching decode iteration for the given requests;
+        batches larger than the biggest bucket run as multiple bucket-sized
+        chunks (no request is ever silently dropped). Returns rid -> new
+        token for every rid passed."""
         if not rids:
             return {}
+        out: dict[int, int] = {}
+        max_bucket = self.decode_buckets[-1]
+        for i in range(0, len(rids), max_bucket):
+            out.update(self._decode_chunk(rids[i: i + max_bucket]))
+        return out
+
+    def _decode_chunk(self, rids: list[int]) -> dict[int, int]:
         t0 = time.perf_counter()
         B = len(rids)
         bucket = self._bucket(B)
-        rids = rids[:bucket]
-        B = len(rids)
         for r in rids:
             req = self.requests[r]
             self.cache.ensure(r, req.context_len)
-        pages = max(len(self.cache.tables[r]) for r in rids)
-        # pad the page dimension to a small set of sizes to bound compilations
-        pages = 1 << (pages - 1).bit_length()
+        pages = self.pad_pages(max(len(self.cache.tables[r]) for r in rids))
         tables = self.cache.batch_tables(rids, pad_to=pages)
         # the input token is the last one in the buffer; its position is
         # context_len - 1 and the cache covers [0, context_len) after writing
         positions = np.array([self.requests[r].context_len - 1 for r in rids], np.int32)
-        tokens = np.array([self.token_buf[r][pos] for r, pos in zip(rids, positions)],
+        tokens = np.array([self.token_buf[r][int(pos)] for r, pos in zip(rids, positions)],
                           np.int32)
         lengths = positions + 1
+        temps, topks = self._sampling_arrays(rids, bucket)
         pad = bucket - B
         if pad:
             tables = np.pad(tables, ((0, pad), (0, 0)))
             positions = np.pad(positions, (0, pad))
             tokens = np.pad(tokens, (0, pad))
             lengths = np.pad(lengths, (0, pad), constant_values=1)
-        fn = self._decode_fn(bucket, pages)
-        logits, self.cache.k_pool, self.cache.v_pool = fn(
+        sampled = (self.sampling.temperature > 0
+                   or any(r in self.req_sampling for r in rids))
+        fn = self._decode_fn(bucket, pages, sampled)
+        key, sample_step = self._next_key()
+        nxt_dev, self.cache.k_pool, self.cache.v_pool = fn(
             self.params, jnp.asarray(tokens), jnp.asarray(positions),
             jnp.asarray(tables), jnp.asarray(lengths),
-            self.cache.k_pool, self.cache.v_pool)
-        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+            self.cache.k_pool, self.cache.v_pool,
+            key, sample_step, jnp.asarray(temps), jnp.asarray(topks))
+        nxt = np.asarray(nxt_dev)   # (bucket,) ids — the only device->host sync
         out = {}
         dt = time.perf_counter() - t0
         for i, r in enumerate(rids):
@@ -267,6 +463,7 @@ class ServingEngine:
             if req.done:
                 req.phase = Phase.FINISHED
                 self.cache.free(r)
+                self.req_sampling.pop(r, None)
         self.stats.decode_tokens += B
         self.stats.decode_steps += 1
         self.stats.decode_seconds += dt
@@ -289,8 +486,13 @@ class ServingEngine:
         self.cache.free(rid)
         return k, v, n
 
-    def migrate_in(self, rid: int, req: Request, tokens: list[int], k, v, n: int) -> None:
+    def migrate_in(self, rid: int, req: Request, tokens, k, v, n: int,
+                   sampling: tuple[float, int] | None = None) -> None:
         self.requests[rid] = req
-        self.token_buf[rid] = list(tokens)
+        toks = list(tokens)
+        self.token_buf[rid] = TokenRing(
+            toks, capacity=len(toks) + max(req.remaining, 0) + 8)
+        if sampling is not None:
+            self.req_sampling[rid] = sampling
         self.cache.import_request(rid, k, v, n)
         req.phase = Phase.DECODING

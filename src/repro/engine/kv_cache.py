@@ -4,11 +4,21 @@ The pool is a pair of (L, num_pages, page_size, Hkv, hd) arrays; per-request
 page lists (block tables) live Python-side in the engine. Non-contiguous
 paging is what makes continuous batching + preemption cheap: evicting a
 request is just returning its pages to the free list.
+
+Hot-path note: every pool write goes through a *jitted, donated* scatter
+(``_scatter_layers``). Donation aliases the input pool buffers to the
+outputs, so XLA updates the pool in place instead of copying the full
+L × num_pages × page × Hkv × hd arrays on every prefill-layer write — the
+dominant cost of the un-donated seed path. Prefill additionally buffers all
+layers' K/V and lands them in a single scatter per prefill (or per
+preemption segment) instead of one dispatch per layer.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -17,6 +27,19 @@ from repro.models.config import ModelConfig
 
 class OutOfPagesError(RuntimeError):
     pass
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_layers(k_pool, v_pool, layer_ids, page_ids, offs, k, v):
+    """Scatter S positions of n layers into donated pools in one op.
+
+    k/v: (n, S, Hkv, hd); layer_ids (n,); page_ids/offs (S,). The donated
+    pools come back aliased — callers must rebind and drop the old refs.
+    """
+    idx = (layer_ids[:, None], page_ids[None, :], offs[None, :])
+    k_pool = k_pool.at[idx].set(k.astype(k_pool.dtype))
+    v_pool = v_pool.at[idx].set(v.astype(v_pool.dtype))
+    return k_pool, v_pool
 
 
 class BlockAllocator:
@@ -54,8 +77,20 @@ class PagedKVCache:
         cfg = self.cfg
         shape = (cfg.num_layers, self.num_pages, self.page_size,
                  cfg.num_kv_heads, cfg.head_dim_)
-        self.k_pool = jnp.zeros(shape, cfg.jnp_dtype)
-        self.v_pool = jnp.zeros(shape, cfg.jnp_dtype)
+        # Storage dtype: XLA CPU lowers 16-bit-float scatters to a scalar
+        # emulation loop (~1000x slower than f32 — measured in
+        # bench_decode_hotpath's development); on CPU we store the pool in
+        # f32 but ROUND every value through cfg.jnp_dtype before storing, so
+        # the cached bits (and therefore tokens) are identical to the
+        # bf16-pool layout used on TPU.
+        self.value_dtype = cfg.jnp_dtype
+        if (jax.default_backend() == "cpu"
+                and jnp.dtype(cfg.jnp_dtype).itemsize < 4):
+            self.storage_dtype = jnp.float32
+        else:
+            self.storage_dtype = cfg.jnp_dtype
+        self.k_pool = jnp.zeros(shape, self.storage_dtype)
+        self.v_pool = jnp.zeros(shape, self.storage_dtype)
         self.allocator = BlockAllocator(self.num_pages, reserved=1)
 
     # ------------------------------------------------------------------
@@ -80,17 +115,27 @@ class PagedKVCache:
         return self.pages_for(tokens) <= self.allocator.free_pages
 
     # ------------------------------------------------------------------
-    def write_prefill_layer(self, rid: int, layer: int, k, v) -> None:
-        """Scatter one layer's prefill K/V (S, Hkv, hd) into the pool."""
-        S = k.shape[0]
+    def _scatter_index(self, rid: int, S: int) -> tuple[np.ndarray, np.ndarray]:
         table = np.asarray(self.tables[rid], np.int32)
         pos = np.arange(S)
-        page_ids = table[pos // self.page_size]
-        offs = pos % self.page_size
-        self.k_pool = self.k_pool.at[layer, page_ids, offs].set(
-            k.astype(self.k_pool.dtype))
-        self.v_pool = self.v_pool.at[layer, page_ids, offs].set(
-            v.astype(self.v_pool.dtype))
+        return table[pos // self.page_size], (pos % self.page_size).astype(np.int32)
+
+    def write_prefill_layer(self, rid: int, layer: int, k, v) -> None:
+        """Scatter one layer's prefill K/V (S, Hkv, hd) into the pool."""
+        self.write_prefill_layers(rid, layer, k[None], v[None])
+
+    def write_prefill_layers(self, rid: int, start_layer: int, k, v) -> None:
+        """Scatter ``n`` consecutive layers' prefill K/V in one donated op.
+
+        k/v: (n, S, Hkv, hd) — layer-buffered prefill output, landed once
+        per prefill instead of once per layer."""
+        n, S = k.shape[0], k.shape[1]
+        page_ids, offs = self._scatter_index(rid, S)
+        layer_ids = np.arange(start_layer, start_layer + n, dtype=np.int32)
+        self.k_pool, self.v_pool = _scatter_layers(
+            self.k_pool, self.v_pool, layer_ids, page_ids, offs,
+            jnp.asarray(k).astype(self.value_dtype),
+            jnp.asarray(v).astype(self.value_dtype))
 
     def batch_tables(self, rids: list[int], pad_to: int | None = None) -> np.ndarray:
         """Dense (B, P) int32 table for a decode batch (padded with page 0 —
@@ -116,11 +161,9 @@ class PagedKVCache:
     def import_request(self, rid: int, k, v, n: int) -> None:
         """Write migrated KV (L, n, Hkv, hd) into freshly allocated pages."""
         self.ensure(rid, n)
-        table = np.asarray(self.tables[rid], np.int32)
-        pos = np.arange(n)
-        page_ids = table[pos // self.page_size]
-        offs = pos % self.page_size
-        self.k_pool = self.k_pool.at[:, page_ids, offs].set(
-            jnp.asarray(k, self.k_pool.dtype))
-        self.v_pool = self.v_pool.at[:, page_ids, offs].set(
-            jnp.asarray(v, self.v_pool.dtype))
+        page_ids, offs = self._scatter_index(rid, n)
+        layer_ids = np.arange(self.cfg.num_layers, dtype=np.int32)
+        self.k_pool, self.v_pool = _scatter_layers(
+            self.k_pool, self.v_pool, layer_ids, page_ids, offs,
+            jnp.asarray(k).astype(self.value_dtype),
+            jnp.asarray(v).astype(self.value_dtype))

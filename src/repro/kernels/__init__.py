@@ -1,3 +1,33 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Attention-backend dispatch shared by the engine and the ops wrappers.
+
+Backends (threaded through ``ServingEngine``/``CoLocatedServer`` and the
+kernel wrappers):
+
+* ``"pallas"``    — the Pallas TPU kernels (flash prefill + paged decode).
+* ``"interpret"`` — the same Pallas kernels in interpret mode: executes the
+  kernel bodies on any backend (CPU parity/debug path).
+* ``"ref"``       — the jnp oracles / pure-XLA flash path (CPU fallback).
+* ``"auto"``      — ``"pallas"`` when a TPU is attached, else ``"ref"``.
+"""
+from __future__ import annotations
+
+BACKENDS = ("auto", "pallas", "interpret", "ref")
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    """Collapse ``"auto"`` to a concrete backend for the current platform."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "auto":
+        import jax
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return backend
+
+
+def backend_flags(backend: str) -> tuple[bool, bool]:
+    """Map a concrete backend to the kernel wrappers' (use_ref, interpret)."""
+    backend = resolve_backend(backend)
+    return backend == "ref", backend == "interpret"

@@ -21,6 +21,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             kv_len: int, q_offset: int, block_q: int, block_kv: int,
@@ -113,7 +116,7 @@ def flash_prefill_pallas(q, k, v, *, kv_len: int, q_offset: int = 0,
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

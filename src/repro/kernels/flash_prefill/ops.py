@@ -3,6 +3,9 @@
 Accepts model-layout tensors (B, S, H, hd), pads sequence dims to block
 multiples and head_dim to 128 (MXU alignment), and dispatches to the Pallas
 kernel (TPU / interpret) or the jnp oracle (CPU fallback for the engine).
+
+Dispatch: pass ``backend="auto"|"pallas"|"interpret"|"ref"`` (preferred),
+or the legacy ``use_ref``/``interpret`` booleans directly.
 """
 from __future__ import annotations
 
@@ -12,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import backend_flags
 from repro.kernels.flash_prefill.kernel import flash_prefill_pallas
 from repro.kernels.flash_prefill.ref import flash_prefill_ref
 
@@ -29,27 +33,37 @@ def _pad_to(x, axis, mult):
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "logit_softcap", "interpret",
-                     "block_q", "block_kv", "use_ref"))
+                     "block_q", "block_kv", "use_ref", "backend"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     logit_softcap: float = 0.0, kv_lens=None,
                     interpret: bool = False, block_q: int = 128,
-                    block_kv: int = 128, use_ref: bool = False):
+                    block_kv: int = 128, use_ref: bool = False,
+                    backend: str | None = None):
     """q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd) -> (B, Sq, Hq, hd).
 
-    kv_lens: (B,) valid kv length per row — the Pallas kernel takes a single
-    static kv_len, so variable rows fall back to per-row max (mask exactness
-    is preserved through the padding mask only for uniform rows; the engine
-    prefills uniform buckets).
+    kv_lens: (B,) valid kv length per row. The ref path honors it exactly
+    (per-row key masking). The Pallas kernel's kv_len is a compile-time
+    scalar: per-row lengths cannot be threaded into the BlockSpec grid
+    without a scalar-prefetch redesign, so the Pallas path masks only at the
+    static ``Skv`` bound — callers with ragged rows must either use the ref
+    path or pad rows to a uniform length (the engine prefills one request
+    at a time, so its rows are always uniform).
     """
     B, Sq, Hq, hd = q.shape
     Skv = k.shape[1]
     scale = 1.0 / np.sqrt(hd)
+    if backend is not None:
+        use_ref, interpret = backend_flags(backend)
     qt = _pad_to(_pad_to(q.transpose(0, 2, 1, 3), 2, block_q), 3, 128)
     kt = _pad_to(_pad_to(k.transpose(0, 2, 1, 3), 2, block_kv), 3, 128)
     vt = _pad_to(_pad_to(v.transpose(0, 2, 1, 3), 2, block_kv), 3, 128)
-    fn = flash_prefill_ref if use_ref else functools.partial(
-        flash_prefill_pallas, block_q=block_q, block_kv=block_kv,
-        interpret=interpret)
-    o = fn(qt, kt, vt, kv_len=Skv, causal=causal, window=window,
-           logit_softcap=logit_softcap, scale=scale)
+    if use_ref:
+        o = flash_prefill_ref(qt, kt, vt, kv_len=Skv, kv_lens=kv_lens,
+                              causal=causal, window=window,
+                              logit_softcap=logit_softcap, scale=scale)
+    else:
+        o = flash_prefill_pallas(
+            qt, kt, vt, kv_len=Skv, causal=causal, window=window,
+            logit_softcap=logit_softcap, scale=scale,
+            block_q=block_q, block_kv=block_kv, interpret=interpret)
     return o[:, :, :Sq, :hd].transpose(0, 2, 1, 3)

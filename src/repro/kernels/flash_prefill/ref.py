@@ -7,8 +7,12 @@ import numpy as np
 
 def flash_prefill_ref(q, k, v, *, kv_len: int, q_offset: int = 0,
                       causal: bool = True, window: int = 0,
-                      logit_softcap: float = 0.0, scale: float | None = None):
-    """q: (B, Hq, Sq, hd); k, v: (B, Hkv, Skv, hd). Returns (B, Hq, Sq, hd)."""
+                      logit_softcap: float = 0.0, scale: float | None = None,
+                      kv_lens=None):
+    """q: (B, Hq, Sq, hd); k, v: (B, Hkv, Skv, hd). Returns (B, Hq, Sq, hd).
+
+    kv_lens: optional (B,) per-row valid key length — tightens the static
+    ``kv_len`` bound row-wise (ragged batches)."""
     B, Hq, Sq, hd = q.shape
     Hkv, Skv = k.shape[1], k.shape[2]
     G = Hq // Hkv
@@ -25,7 +29,10 @@ def flash_prefill_ref(q, k, v, *, kv_len: int, q_offset: int = 0,
         mask = mask & (rel >= 0)
         if window:
             mask = mask & (rel < window)
-    s = jnp.where(mask[None, None, None], s, -1e30)
+    mask = jnp.broadcast_to(mask[None], (B, Sq, Skv))
+    if kv_lens is not None:
+        mask = mask & (k_pos[None] < jnp.asarray(kv_lens)[:, None, None])
+    s = jnp.where(mask[:, None, None], s, -1e30)
     p = jnp.exp(s - s.max(axis=-1, keepdims=True))
     p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
     o = jnp.einsum("bkgqc,bkcd->bkgqd", p, v.astype(jnp.float32))

@@ -91,6 +91,8 @@ def _trip_count(cond: Computation) -> int:
 _DOT_RE = re.compile(
     r"= (\w+\[[\d,]*\])\S* dot\(.*?lhs_contracting_dims=\{([\d,]*)\}")
 _DOT_OPERAND_RE = re.compile(r"dot\(\s*%?([\w\.\-]+)\s*[,)]")
+# older XLA prints operand types inline: dot(f32[64,128]{1,0} %convert.15, ...)
+_DOT_LHS_INLINE_RE = re.compile(r"dot\(\s*\w+\[([\d,]*)\]")
 
 
 def analyze(hlo: str) -> dict:
@@ -130,19 +132,24 @@ def analyze(hlo: str) -> dict:
                 for d in m_res.group(2).split(","):
                     if d:
                         prod_res *= int(d)
-                # contracting dim sizes from the lhs operand's type
+                # contracting dim sizes from the lhs operand's type — either
+                # printed inline (older XLA) or looked up by operand name
                 k = 1
-                mo = _DOT_OPERAND_RE.search(line)
-                if mo:
-                    lhs = mo.group(1).lstrip("%")
-                    t = result_types.get(lhs)
-                    if t:
-                        ms = _SHAPE_RE.match(t)
+                dims: list[int] = []
+                mi = _DOT_LHS_INLINE_RE.search(line)
+                if mi:
+                    dims = [int(x) for x in mi.group(1).split(",") if x]
+                else:
+                    mo = _DOT_OPERAND_RE.search(line)
+                    if mo:
+                        t = result_types.get(mo.group(1).lstrip("%"))
+                        ms = _SHAPE_RE.match(t) if t else None
                         if ms:
                             dims = [int(x) for x in ms.group(2).split(",") if x]
-                            for ci in md.group(2).split(","):
-                                if ci and int(ci) < len(dims):
-                                    k *= dims[int(ci)]
+                if dims:
+                    for ci in md.group(2).split(","):
+                        if ci and int(ci) < len(dims):
+                            k *= dims[int(ci)]
                 out["dot_flops"] += 2.0 * prod_res * k
                 continue
             # collectives

@@ -31,10 +31,12 @@ class CoLocatedServer:
     """1 relaxed + 1 strict engine + the OOCO scheduling points (§3.4)."""
 
     def __init__(self, cfg, *, policy: str = "ooco", slo_tpot: float = 1.0,
-                 num_pages: int = 1024, page_size: int = 16, seed: int = 0):
+                 num_pages: int = 1024, page_size: int = 16, seed: int = 0,
+                 backend: str = "auto"):
         self.cfg = cfg
         self.policy = policy
         self.slo_tpot = slo_tpot
+        self.backend = backend
         self.clock = time.perf_counter  # drivers override with trace-relative time
         # §3.4.1: the layer-level preemption predicate polls this between
         # transformer layers. Drivers wire it to their live arrival feed
@@ -45,9 +47,11 @@ class CoLocatedServer:
         params = model.init(jax.random.PRNGKey(seed))
         # one decode bucket bounds jit-compilation variants on cold start
         self.relaxed = ServingEngine(model, params, num_pages=num_pages,
-                                     page_size=page_size, decode_buckets=(8,))
+                                     page_size=page_size, decode_buckets=(8,),
+                                     backend=backend)
         self.strict = ServingEngine(model, params, num_pages=num_pages,
-                                    page_size=page_size, decode_buckets=(8,))
+                                    page_size=page_size, decode_buckets=(8,),
+                                    backend=backend)
         self.pm = PerfModel(cfg, cpu_measured())
         self.rng = random.Random(seed)
         self.online_queue: list[tuple[Request, list[int]]] = []
@@ -93,7 +97,9 @@ class CoLocatedServer:
 
     def _migrate_to_strict(self, req: Request) -> None:
         k, v, n = self.relaxed.migrate_out(req.rid)
-        self.strict.migrate_in(req.rid, req, self.relaxed.token_buf[req.rid], k, v, n)
+        self.strict.migrate_in(req.rid, req, self.relaxed.token_buf[req.rid],
+                               k, v, n,
+                               sampling=self.relaxed.req_sampling.pop(req.rid, None))
         (self.strict_online if req.kind == Kind.ONLINE
          else self.strict_offline).append(req)
 
@@ -138,9 +144,7 @@ class CoLocatedServer:
                 if r.done:
                     continue
                 self.relaxed_offline.remove(r)
-                k, v, n = self.relaxed.migrate_out(r.rid)
-                self.strict.migrate_in(r.rid, r, self.relaxed.token_buf[r.rid], k, v, n)
-                self.strict_offline.append(r)
+                self._migrate_to_strict(r)
         for r in batch:
             if r.done:
                 self.finished.append(r)
@@ -158,6 +162,10 @@ def main():
     ap.add_argument("--arch", default="qwen2.5-7b")
     ap.add_argument("--policy", default="ooco",
                     choices=["base_pd", "online_priority", "ooco"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "pallas", "interpret", "ref"],
+                    help="attention backend: auto = Pallas kernels on TPU, "
+                         "XLA/jnp reference on CPU")
     ap.add_argument("--duration", type=float, default=20.0)
     ap.add_argument("--online-qps", type=float, default=0.5)
     ap.add_argument("--offline-qps", type=float, default=1.0)
@@ -165,7 +173,7 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
-    server = CoLocatedServer(cfg, policy=args.policy)
+    server = CoLocatedServer(cfg, policy=args.policy, backend=args.backend)
     rng = np.random.default_rng(args.seed)
     online = tr.online_trace("ooc", duration=args.duration,
                              mean_qps=args.online_qps, seed=args.seed)

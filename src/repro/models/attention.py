@@ -23,6 +23,19 @@ from repro.sharding.ctx import constrain
 
 NEG_INF = -1e30
 
+#: attention-backend name (repro.kernels.resolve_backend) -> attn_prefill impl
+IMPL_FOR_BACKEND = {"pallas": "pallas", "interpret": "pallas_interpret",
+                    "ref": "xla"}
+
+
+def impl_for_backend(backend: str) -> str:
+    """Map an engine attention backend to the ``attn_prefill`` impl name.
+
+    ``"ref"`` maps to the pure-XLA flash path (the CPU oracle the Pallas
+    kernels are validated against), not the naive full-score path."""
+    from repro.kernels import resolve_backend
+    return IMPL_FOR_BACKEND[resolve_backend(backend)]
+
 
 def init_attn(rng, cfg: ModelConfig, d_model: int | None = None):
     d = d_model or cfg.d_model

@@ -29,6 +29,13 @@ try:  # jax >= 0.6 moved shard_map out of experimental
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map
 
+import inspect
+
+# replication-check kwarg was renamed check_rep -> check_vma across jax
+# versions; resolve once at import (same pattern as kernels' _CompilerParams)
+_CHECK_KW = ("check_vma" if "check_vma"
+             in inspect.signature(shard_map).parameters else "check_rep")
+
 from repro.models.config import ModelConfig
 
 
@@ -115,7 +122,7 @@ def moe_mlp_ep(p, x, cfg: ModelConfig, mesh, *, axis: str = "model",
                    in_specs=(tok_spec, P(None, None),
                              P(axis, None, None), P(axis, None, None),
                              P(axis, None, None)),
-                   out_specs=tok_spec, check_vma=False)
+                   out_specs=tok_spec, **{_CHECK_KW: False})
     out = fn(x.reshape(T, d), p["router"], p["gate"], p["up"], p["down"])
     return out.reshape(B, S, d)
 

@@ -36,7 +36,10 @@ def test_dryrun_subprocess(arch, shape):
         [sys.executable, "-c", CODE.format(arch=arch, shape=shape)],
         capture_output=True, text=True, timeout=900,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"})
+             "HOME": "/root",
+             # the dry-run forces 512 *host* devices; pin the platform so
+             # jax doesn't burn 60s probing a TPU backend first
+             "JAX_PLATFORMS": "cpu"})
     assert out.returncode == 0, out.stderr[-2000:]
     payload = json.loads(out.stdout.strip().splitlines()[-1])
     assert payload["ok"]

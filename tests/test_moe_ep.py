@@ -17,8 +17,10 @@ from repro.models.moe_ep import moe_mlp_ep, moe_ep_ref, pad_experts
 
 cfg = dataclasses.replace(get_config("granite-moe-3b-a800m").reduced(),
                           moe_capacity_factor=8.0)  # no drops
-mesh = jax.make_mesh((1, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+_axis_type = getattr(jax.sharding, "AxisType", None)  # newer jax only
+mesh = (jax.make_mesh((1, 2), ("data", "model"),
+                      axis_types=(_axis_type.Auto,) * 2)
+        if _axis_type is not None else jax.make_mesh((1, 2), ("data", "model")))
 p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
 pp, E_pad = pad_experts(p, cfg, mesh.shape["model"])
 assert E_pad % 2 == 0
@@ -36,7 +38,9 @@ def test_moe_ep_matches_oracle():
     out = subprocess.run(
         [sys.executable, "-c", CODE], capture_output=True, text=True,
         timeout=600, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                          "HOME": "/root"})
+                          "HOME": "/root",
+                          # forces *host* devices; skip the TPU-backend probe
+                          "JAX_PLATFORMS": "cpu"})
     assert out.returncode == 0, out.stderr[-3000:]
     err = json.loads(out.stdout.strip().splitlines()[-1])["err"]
     assert err < 5e-3
