@@ -1,16 +1,25 @@
 """Figure 6 reproduction: online-offline co-location serving experiment.
 
-Protocol (paper §5.2):
-  1. Scale online traffic so the system "just meets" the traffic peak with
-     no offline load (highest scale with violation rate <= threshold).
-  2. Sweep offline QPS from zero; for each policy, the *maximum effective
-     offline throughput* is the highest offline load whose online SLO
-     violation rate stays <= 3 %.
+Two layers:
+
+* **Simulator sweep** (paper §5.2 protocol): scale online traffic to the
+  peak, sweep offline QPS, report each policy's maximum effective offline
+  throughput at <= 3 % online violations.
+* **Real-runtime policy comparison** (``run_runtime_policy_comparison``):
+  the pool runtime replays one bursty trace per policy under the virtual
+  clock — real JAX engines, deterministic modeled time — and records the
+  ``base_pd`` / ``online_priority`` / ``ooco`` summaries in
+  ``BENCH_colocation.json``. This is the regression gate the
+  ``colocation-replay`` CI step runs (``--quick``).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import time
 from dataclasses import dataclass
 
+from repro.cluster.runtime import PoolRuntime, VirtualClock, replay_hw
 from repro.cluster.simulator import SimConfig, Simulator
 from repro.configs import get_config
 from repro.core.hardware import TPU_V5E
@@ -95,6 +104,107 @@ def run_colocation(arch="qwen2.5-7b", datasets=("ooc", "azure_conv", "azure_code
     return results
 
 
+def run_runtime_policy_comparison(*, arch="qwen2.5-7b", duration=10.0,
+                                  online_qps=1.2, n_offline=100,
+                                  offline_qps=20.0, n_strict=1, n_relaxed=2,
+                                  slo_ttft=1.0, slo_tpot=0.030, seed=0,
+                                  quick=False, verbose=True):
+    """Replay one bursty trace per policy through the REAL pool runtime
+    under the virtual clock. Deterministic: the same seed reproduces the
+    same summaries bit-for-bit, so policy regressions diff cleanly.
+
+    Fixed evaluation window (§5.2 protocol): the offline backlog saturates
+    the cluster, every policy gets the same window (no drain), and offline
+    tokens/s measures what the policy extracted at its SLO attainment —
+    a lighter trace lets every policy finish everything and the
+    throughputs tie."""
+    import jax
+
+    from repro.models.model import build_model
+
+    if quick:
+        duration, n_offline = 6.0, 60
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(seed))
+    online = tr.online_trace("ooc", duration=duration, mean_qps=online_qps,
+                             seed=seed)
+    offline = tr.with_uniform_qps(
+        tr.offline_requests(n_offline, seed=seed + 1), offline_qps)
+    donor = None
+    out = {}
+    for policy in POLICIES:
+        rt = PoolRuntime(cfg, policy=policy, n_strict=n_strict,
+                         n_relaxed=n_relaxed, clock=VirtualClock(),
+                         backend="ref", num_pages=256, page_size=8,
+                         slo_ttft=slo_ttft, slo_tpot=slo_tpot,
+                         hw=replay_hw(), seed=seed, model=model,
+                         params=params, kernels_from=donor)
+        donor = donor or rt.kernel_donor
+        t0 = time.perf_counter()
+        m = rt.run(online, offline, duration=duration, max_prompt=48,
+                   max_output=12, drain=False)
+        m["wall_seconds"] = round(time.perf_counter() - t0, 2)
+        out[policy] = m
+        if verbose:
+            print(f"  runtime {policy:16s} attain={m['online_slo_attainment']:.2f} "
+                  f"tpot_p99={m['online_tpot_p99']:.4f} "
+                  f"offline_tok/s={m['offline_tokens_per_s']:.1f} "
+                  f"pulls={m['pulls']} preemptions={m['preemptions']}",
+                  flush=True)
+    return {
+        "arch": arch,
+        "topology": f"{n_strict}-strict+{n_relaxed}-relaxed",
+        "slo_ttft": slo_ttft,
+        "slo_tpot": slo_tpot,
+        "duration": duration,
+        "policies": out,
+        "ooco_vs_online_priority_offline_tput": round(
+            out["ooco"]["offline_tokens_per_s"]
+            / max(out["online_priority"]["offline_tokens_per_s"], 1e-9), 3),
+    }
+
+
+def write_bench_json(result, path="BENCH_colocation.json"):
+    blob = {
+        "bench": "colocation",
+        "description": (
+            "Real pool-runtime policy comparison: one bursty synthetic trace "
+            "(ooc stats) replayed per policy through PoolRuntime under the "
+            "virtual clock (real JAX engines, perf-model time — "
+            "deterministic). Acceptance: ooco offline tokens/s > "
+            "online_priority at equal-or-better online SLO attainment; "
+            "base_pd violates the TPOT SLO. Reproduce: PYTHONPATH=src "
+            "python benchmarks/bench_colocation.py [--quick]."),
+        "runtime_policy_comparison": result,
+    }
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="BENCH_colocation.json",
+                    help="path for the policy-comparison record "
+                         "('' disables writing)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    res = run_runtime_policy_comparison(quick=args.quick, seed=args.seed)
+    pol = res["policies"]
+    ooco, op, base = pol["ooco"], pol["online_priority"], pol["base_pd"]
+    ok = (ooco["offline_tokens_per_s"] > op["offline_tokens_per_s"]
+          and ooco["online_slo_attainment"] >= op["online_slo_attainment"]
+          and ooco["online_slo_attainment"] >= base["online_slo_attainment"])
+    print(f"ooco_vs_online_priority={res['ooco_vs_online_priority_offline_tput']}x "
+          f"acceptance={'PASS' if ok else 'FAIL'}")
+    if args.json:
+        print(f"wrote {write_bench_json(res, args.json)}")
+    return 0 if ok else 1
+
+
 def summarize(results):
     lines = []
     by_ds: dict[str, dict[str, ColocationResult]] = {}
@@ -108,3 +218,8 @@ def summarize(results):
         lines.append((ds, {p: r.max_offline_token_tput for p, r in pr.items()},
                       ratio))
     return lines
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

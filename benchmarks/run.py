@@ -78,7 +78,23 @@ def bench_decode_hotpath(quick=False):
 
 
 def bench_colocation(quick=False):
-    from benchmarks.bench_colocation import run_colocation, summarize
+    from benchmarks.bench_colocation import (run_colocation,
+                                             run_runtime_policy_comparison,
+                                             summarize)
+    # real pool-runtime replay (virtual clock, deterministic) — the policy
+    # regression gate; the simulator sweep below reproduces Fig. 6
+    t0 = time.perf_counter()
+    rt = run_runtime_policy_comparison(quick=quick, verbose=not quick)
+    pol = rt["policies"]
+    _row("fig6_runtime_replay", (time.perf_counter() - t0) * 1e6,
+         f"attain(base_pd/op/ooco)="
+         f"{pol['base_pd']['online_slo_attainment']:.2f}/"
+         f"{pol['online_priority']['online_slo_attainment']:.2f}/"
+         f"{pol['ooco']['online_slo_attainment']:.2f} "
+         f"offline_tok/s={pol['base_pd']['offline_tokens_per_s']:.0f}/"
+         f"{pol['online_priority']['offline_tokens_per_s']:.0f}/"
+         f"{pol['ooco']['offline_tokens_per_s']:.0f} "
+         f"ooco_vs_op={rt['ooco_vs_online_priority_offline_tput']}x")
     t0 = time.perf_counter()
     datasets = ("ooc",) if quick else ("ooc", "azure_conv", "azure_code")
     results = run_colocation(duration=120 if quick else 180,

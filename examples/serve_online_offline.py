@@ -1,29 +1,30 @@
-"""End-to-end driver: REAL co-located serving on this host.
+"""End-to-end driver: REAL pool-based co-located serving on this host.
 
-Two ServingEngine instances (latency-relaxed + latency-strict) run a reduced
-model with actual JAX compute; online requests preempt offline prefills at
-transformer-layer granularity, KV migrates between engines, and decode
-batches are selected under a measured-TPOT SLO — the full OOCO data path of
-Figure 4, executing for real.
+N latency-strict + M latency-relaxed ServingEngines run a reduced model with
+actual JAX compute; online requests preempt offline prefills at transformer-
+layer granularity, KV migrates between engine pairs (push after prefill,
+§3.4.3 pull when the strict pool has headroom), and decode batches are
+selected under the TPOT SLO — the full OOCO data path of Figure 4.
 
   PYTHONPATH=src python examples/serve_online_offline.py --duration 30
+  PYTHONPATH=src python examples/serve_online_offline.py \
+      --strict 1 --relaxed 2 --virtual-clock      # deterministic replay
 """
 import argparse
-import time
 
-import numpy as np
-
+from repro.cluster.runtime import (POLICIES, PoolRuntime, VirtualClock,
+                                   WallClock, replay_hw)
 from repro.configs import get_config
-from repro.core.request import Kind, Request
-from repro.data import traces as tr
-from repro.launch.serve import CoLocatedServer
+from repro.launch.serve import build_traces
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-7b")
-    ap.add_argument("--policy", default="ooco",
-                    choices=["base_pd", "online_priority", "ooco"])
+    ap.add_argument("--policy", default="ooco", choices=list(POLICIES))
+    ap.add_argument("--strict", type=int, default=1)
+    ap.add_argument("--relaxed", type=int, default=1)
+    ap.add_argument("--virtual-clock", action="store_true")
     ap.add_argument("--duration", type=float, default=30.0)
     ap.add_argument("--online-qps", type=float, default=0.4)
     ap.add_argument("--offline-qps", type=float, default=1.0)
@@ -31,54 +32,36 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
-    print(f"serving reduced {args.arch} under policy={args.policy} ...")
-    server = CoLocatedServer(cfg, policy=args.policy)
-    rng = np.random.default_rng(args.seed)
-    online = tr.online_trace("ooc", duration=args.duration,
-                             mean_qps=args.online_qps, seed=args.seed)
-    n_off = max(int(args.offline_qps * args.duration), 1)
-    offline = tr.with_uniform_qps(tr.offline_requests(n_off), args.offline_qps)
+    clock = VirtualClock() if args.virtual_clock else WallClock()
+    print(f"serving reduced {args.arch} under policy={args.policy} "
+          f"({args.strict} strict + {args.relaxed} relaxed, "
+          f"{'virtual' if args.virtual_clock else 'wall'} clock) ...")
+    runtime = PoolRuntime(cfg, policy=args.policy, n_strict=args.strict,
+                          n_relaxed=args.relaxed, clock=clock,
+                          slo_ttft=2.0, slo_tpot=0.05,
+                          hw=replay_hw() if args.virtual_clock else None,
+                          seed=args.seed)
+    online, offline = build_traces(args, cfg)   # same synthesis as the CLI
+    m = runtime.run(online, offline, duration=args.duration,
+                    max_prompt=48, max_output=24)
 
-    pending = sorted([(t.arrival, Kind.ONLINE, t) for t in online]
-                     + [(t.arrival, Kind.OFFLINE, t) for t in offline])
-    # warm the jit caches before the clock starts
-    server.step()
-    t0 = time.perf_counter()
-    server.clock = lambda: time.perf_counter() - t0
-    # preemption probe: an online request is due the moment its trace
-    # timestamp passes (drives real §3.4.1 layer-level interruptions)
-    server.incoming_online = lambda: bool(pending) and pending[0][1] == Kind.ONLINE \
-        and pending[0][0] <= time.perf_counter() - t0
-    while True:
-        now = time.perf_counter() - t0
-        if now > args.duration and not (
-                server.online_queue or server.offline_queue
-                or server.strict_online or server.strict_offline
-                or server.relaxed_offline):
-            break
-        if now > 3 * args.duration:
-            break  # drain cap
-        while pending and pending[0][0] <= now:
-            _, kind, t = pending.pop(0)
-            p = list(rng.integers(0, cfg.vocab_size, min(max(t.prompt_len, 8), 48)))
-            server.submit(Request(kind, now, len(p), min(t.output_len, 24)), p)
-        server.step()
-
-    wall = time.perf_counter() - t0
-    on = [r for r in server.finished if r.kind == Kind.ONLINE]
-    off = [r for r in server.finished if r.kind == Kind.OFFLINE]
-    off_tokens = sum(r.generated for r in off)
-    ttfts = [r.first_token_time - r.arrival for r in on
-             if r.first_token_time is not None]
-    print(f"finished: online={len(on)} offline={len(off)} in {wall:.1f}s")
-    print(f"offline throughput: {off_tokens / wall:.1f} tok/s "
-          f"({off_tokens} tokens)")
-    if ttfts:
-        print(f"online TTFT p50={np.median(ttfts):.2f}s "
-              f"max={max(ttfts):.2f}s")
-    print(f"layer-level preemptions: {server.relaxed.stats.preemptions}")
-    print(f"strict decode steps: {server.strict.stats.decode_steps}, "
-          f"relaxed decode steps: {server.relaxed.stats.decode_steps}")
+    print(f"finished: online={m['online_finished']}/{m['online_requests']} "
+          f"offline={m['offline_finished']}/{m['offline_requests']} "
+          f"in {m['elapsed']:.1f}s ({m['clock']} time)")
+    print(f"offline throughput: {m['offline_tokens_per_s']:.1f} tok/s "
+          f"({m['offline_tokens']} tokens)")
+    if m["online_ttft_p50"] is not None:
+        print(f"online TTFT p50={m['online_ttft_p50']:.3f}s "
+              f"p99={m['online_ttft_p99']:.3f}s")
+    if m["online_tpot_p50"] is not None:
+        print(f"online TPOT p50={m['online_tpot_p50'] * 1e3:.1f}ms "
+              f"p99={m['online_tpot_p99'] * 1e3:.1f}ms "
+              f"(SLO {runtime.slo_tpot * 1e3:.0f}ms, "
+              f"attainment {m['online_slo_attainment']:.0%})")
+    print(f"layer-level preemptions: {m['preemptions']}, "
+          f"migrations: {m['migrations']} (pulled: {m['pulls']}), "
+          f"evictions: {m['evictions']}")
+    print(f"rounds: {m['rounds']} (+{m['idle_rounds']} idle skipped)")
 
 
 if __name__ == "__main__":

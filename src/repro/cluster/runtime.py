@@ -1,0 +1,726 @@
+"""Pool-based co-located serving runtime: N strict + M relaxed REAL engines.
+
+This is the cluster layer of the paper (§3.1–3.4) executing on actual
+``ServingEngine`` instances instead of the discrete-event simulator: the
+latency-strict pool decodes online traffic under the TPOT SLO, the
+latency-relaxed pool absorbs prefills and offline decoding, and every
+scheduling point routes through the *same* ``core.scheduling`` functions and
+the Roofline ``PerfModel`` the simulator uses — ``last_bottleneck`` per
+instance steers eviction-victim selection, the strict-pool pressure EMA
+feeds the §3.4.2 gating cost model, and the §3.4.3 pull migration moves real
+KV pages between any relaxed→strict engine pair.
+
+Clocking is pluggable:
+
+* ``WallClock`` — live serving; step latencies are measured, idle rounds
+  sleep until the next arrival instead of spinning.
+* ``VirtualClock`` — **deterministic trace replay**: tokens come from the
+  real JAX compute, but time advances by the perf model's modeled step
+  latencies, so two replays of the same trace produce bit-identical token
+  streams, finished sets, and metrics (the foundation for policy
+  regression gates — see tests/test_colocation_runtime.py and the
+  ``colocation-replay`` CI step).
+
+Pools execute in parallel in a real deployment, so a virtual round advances
+by the *maximum* modeled cost across engines; each engine's actions within
+a round (prefill, then decode) are serialized and their costs summed.
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.core import scheduling as sch
+from repro.core.hardware import cpu_measured
+from repro.core.perf_model import HardwareParams, PerfModel
+from repro.core.request import Kind, Phase, Request
+from repro.data.traces import TraceRequest
+from repro.engine.engine import ServingEngine
+from repro.models.model import build_model
+
+POLICIES = ("base_pd", "online_priority", "ooco")
+
+
+def replay_hw() -> HardwareParams:
+    """CPU-scale replay calibration for the virtual clock.
+
+    The reduced smoke-test models serve requests of tens of tokens, so with
+    datacenter rates every step would collapse into the static overhead and
+    no policy could be distinguished. This calibration scales the achievable
+    rates down so that reduced-model request sizes reproduce the full-scale
+    bottleneck structure: decode attention is memory-bound and grows with
+    context length, GEMMs saturate within a few tens of requests, and the
+    per-step overhead stays a minority term. Fixed constants — never
+    measured — so virtual-clock replays are machine-independent.
+    """
+    return HardwareParams(
+        name="replay_cpu_scale",
+        F_g=5e9, F_ap=3e9, F_ad=1e9,
+        M_g=1e9, M_a=2e7,
+        O_p=2e-3, O_d=1e-3,
+        B_c=1e8, hbm_capacity=64e6,
+        peak_flops=5e9, peak_hbm_bw=1e9)
+
+
+# ---------------------------------------------------------------------------
+# clocks
+# ---------------------------------------------------------------------------
+
+class WallClock:
+    """Live-serving clock: real time, bounded sleep when idle."""
+
+    virtual = False
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def advance(self, dt: float) -> None:
+        pass  # wall time advances by itself
+
+    def reset(self) -> None:
+        """Re-anchor t=0 (run() calls this so engine construction and
+        import time never count against trace-relative TTFTs)."""
+        self._t0 = time.perf_counter()
+
+    def idle_until(self, t: float) -> None:
+        """Sleep toward t in bounded slices (the busy-loop fix: idle rounds
+        must not spin ``step()`` and dilute measured throughput)."""
+        delta = t - self.now()
+        if delta > 0:
+            time.sleep(min(delta, 0.05))
+
+
+class VirtualClock:
+    """Deterministic replay clock: time is whatever the perf model says."""
+
+    virtual = True
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+
+    def now(self) -> float:
+        return self._now
+
+    def advance(self, dt: float) -> None:
+        self._now += float(dt)
+
+    def idle_until(self, t: float) -> None:
+        self._now = max(self._now, float(t))
+
+    def reset(self) -> None:
+        pass  # virtual time only moves by advance()/idle_until()
+
+
+# ---------------------------------------------------------------------------
+# pool state + metrics
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EngineSlot:
+    """One engine instance plus the §3.4 per-instance scheduling state."""
+    name: str
+    role: str                      # "strict" | "relaxed"
+    engine: ServingEngine
+    online: list[Request] = field(default_factory=list)
+    offline: list[Request] = field(default_factory=list)
+    last_bottleneck: str = "memory"
+    pressure: float = 0.0          # strict-pool online-latency EMA (§3.4.2)
+
+    @property
+    def resident(self) -> int:
+        return len(self.online) + len(self.offline)
+
+
+@dataclass
+class Metrics:
+    """Runtime counters; ``PoolRuntime.summary()`` turns these plus the
+    per-request SLO accounting into the policy-comparison record."""
+    rounds: int = 0
+    idle_rounds: int = 0
+    migrations: int = 0
+    pulls: int = 0
+    evictions: int = 0
+
+
+def _pct(xs: list[float], q: float) -> float | None:
+    return float(np.percentile(xs, q)) if xs else None
+
+
+class PoolRuntime:
+    """N-strict + M-relaxed co-located serving over real JAX engines."""
+
+    def __init__(self, cfg, *, policy: str = "ooco", n_strict: int = 1,
+                 n_relaxed: int = 1, clock=None, slo_ttft: float = 4.0,
+                 slo_tpot: float = 1.0, num_pages: int = 512,
+                 page_size: int = 16, seed: int = 0, backend: str = "auto",
+                 hw: HardwareParams | None = None,
+                 decode_buckets: tuple[int, ...] = (8,),
+                 relaxed_decode_cap: int = 16,
+                 gating_horizon: float = 20.0,
+                 model=None, params=None,
+                 kernels_from: ServingEngine | None = None):
+        assert policy in POLICIES, policy
+        assert n_strict >= 1 and n_relaxed >= 1
+        self.cfg = cfg
+        self.policy = policy
+        self.clock = clock or WallClock()
+        self.slo_ttft = slo_ttft
+        self.slo_tpot = slo_tpot
+        self.pm = PerfModel(cfg, hw or cpu_measured())
+        self.rng = random.Random(seed)
+        self.seed = seed
+        self.relaxed_decode_cap = relaxed_decode_cap
+        self.gating_horizon = gating_horizon
+        if model is None:
+            model = build_model(cfg, remat=False)
+            params = model.init(jax.random.PRNGKey(seed))
+        self.model, self.params = model, params
+        # engines in (and across) runtimes over the same weights share one
+        # compiled-kernel set; pass runtime.kernel_donor to the next runtime
+        donor: ServingEngine | None = kernels_from
+        self.strict_pool: list[EngineSlot] = []
+        self.relaxed_pool: list[EngineSlot] = []
+        for i in range(n_strict):
+            eng = ServingEngine(model, params, num_pages=num_pages,
+                                page_size=page_size, decode_buckets=decode_buckets,
+                                backend=backend, kernels_from=donor)
+            donor = donor or eng
+            self.strict_pool.append(EngineSlot(f"strict{i}", "strict", eng))
+        for i in range(n_relaxed):
+            eng = ServingEngine(model, params, num_pages=num_pages,
+                                page_size=page_size, decode_buckets=decode_buckets,
+                                backend=backend, kernels_from=donor)
+            self.relaxed_pool.append(EngineSlot(f"relaxed{i}", "relaxed", eng))
+        self.kernel_donor = donor  # share compiled kernels across runtimes
+        # queues hold (req, tokens[, home_slot]) — home pins a layer-
+        # interrupted prefill to the engine holding its partial state
+        self.online_queue: list[tuple[Request, list[int]]] = []
+        self.offline_queue: list[tuple[Request, list[int], EngineSlot | None]] = []
+        self.finished: list[Request] = []
+        self.all_requests: list[Request] = []
+        # prefilled offline waiting for strict-pool capacity (baselines);
+        # their KV stays on the source relaxed engine until a slot frees
+        self.place_queue: list[tuple[Request, EngineSlot]] = []
+        self.tokens: dict[int, list[int]] = {}   # rid -> final token stream
+        self.metrics = Metrics()
+        self.measured_tpot = slo_tpot / 4
+        self._op_cap: int | None = None
+        # wall-mode live-arrival probe for §3.4.1 (run() wires the trace feed)
+        self.incoming_online = lambda: False
+        self._next_online_arrival = lambda: None
+
+    # ------------------------------------------------------------------
+    # submission + one co-located round
+    # ------------------------------------------------------------------
+    def submit(self, req: Request, tokens: list[int]) -> None:
+        self.all_requests.append(req)
+        if req.kind == Kind.ONLINE:
+            self.online_queue.append((req, tokens))
+        else:
+            self.offline_queue.append((req, tokens, None))
+
+    def step(self) -> bool:
+        """One scheduling round across every pool. Returns True if any
+        engine did work; virtual mode advances the clock by the modeled
+        round duration (max across engines — pools run in parallel)."""
+        now = self.clock.now()
+        self._retry_placements()
+        costs = [self._relaxed_round(slot, now) for slot in self.relaxed_pool]
+        costs += [self._strict_round(slot, now) for slot in self.strict_pool]
+        self.metrics.rounds += 1
+        cost = max(costs)
+        if cost > 0:
+            self.clock.advance(cost)
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    # relaxed pool: prefill (layer-interruptible) + offline decode
+    # ------------------------------------------------------------------
+    def _relaxed_round(self, slot: EngineSlot, now: float) -> float:
+        cost = self._prefill_one(slot, now)
+        if slot.online or (self.policy == "ooco" and slot.offline):
+            cost += self._decode_slot(slot, now + cost, relaxed=True)
+        return cost
+
+    def _prefill_cost(self, est_latency: float, layers_run: int,
+                      measured: float) -> float:
+        if not self.clock.virtual:
+            return measured
+        return est_latency * layers_run / max(self.cfg.num_layers, 1)
+
+    def _prefill_one(self, slot: EngineSlot, now: float) -> float:
+        eng = slot.engine
+        if (self.policy == "base_pd" and self.offline_queue
+                and (not self.online_queue
+                     or self.offline_queue[0][0].arrival
+                     < self.online_queue[0][0].arrival)):
+            # base_pd has no online/offline distinction at prefill: plain
+            # FIFO, so offline prefills head-of-line block online TTFT
+            return self._prefill_offline(slot, now)
+        if self.online_queue:
+            req, toks = self.online_queue.pop(0)
+            if not eng.cache.can_fit(len(toks)):
+                need = (eng.cache.pages_for(len(toks))
+                        - eng.cache.allocator.free_pages) * eng.cache.page_size
+                self._evict_from(slot, need)
+            if not eng.cache.can_fit(len(toks)):
+                self.online_queue.insert(0, (req, toks))
+                return 0.0
+            eng.add_request(req, toks)
+            est = self.pm.prefill_estimate([len(toks)]).latency
+            t0 = time.perf_counter()
+            eng.prefill(req.rid)
+            cost = self._prefill_cost(est, self.cfg.num_layers,
+                                      time.perf_counter() - t0)
+            if req.first_token_time is None:
+                req.first_token_time = now + cost
+            if req.done:
+                eng.cache.free(req.rid)
+                self._finish(req, eng, now + cost)
+                return cost
+            cost += self._place_on_strict(req, slot)
+            return cost
+        return self._prefill_offline(slot, now)
+
+    def _prefill_offline(self, slot: EngineSlot, now: float) -> float:
+        eng = slot.engine
+        entry = self._next_offline_for(slot)
+        if entry is None:
+            return 0.0
+        req, toks, home = entry
+        if home is None:
+            eng.add_request(req, toks)
+        est = self.pm.prefill_estimate([len(toks)]).latency
+        preempt = self._preempt_probe(slot, now, est) \
+            if self.policy == "ooco" else None
+        layers_before = req.prefill_layers_done
+        t0 = time.perf_counter()
+        status = eng.prefill(req.rid, should_preempt=preempt)
+        cost = self._prefill_cost(est, req.prefill_layers_done - layers_before,
+                                  time.perf_counter() - t0)
+        if status == "preempted":
+            req.phase = Phase.QUEUED
+            self.offline_queue.insert(0, (req, toks, slot))
+            return cost
+        if req.first_token_time is None:
+            req.first_token_time = now + cost
+        if req.done:
+            eng.cache.free(req.rid)
+            self._finish(req, eng, now + cost)
+            return cost
+        if self.policy == "ooco":
+            slot.offline.append(req)     # decode on relaxed until pulled
+        else:
+            cost += self._place_on_strict(req, slot)
+        return cost
+
+    def _next_offline_for(self, slot: EngineSlot):
+        """First admissible offline queue entry for this engine: resumes are
+        pinned to the engine holding the partial state; fresh prefills must
+        fit and (ooco) pass the §3.4.2 gating cost model. Bounded FIFO scan."""
+        eng = slot.engine
+        scanned = 0
+        for entry in list(self.offline_queue):
+            req, toks, home = entry
+            if home is not None and home is not slot:
+                continue
+            scanned += 1
+            if scanned > 4:
+                break
+            if home is None:
+                if not eng.cache.can_fit(len(toks)):
+                    continue
+                if self.policy == "ooco" and req.prefill_layers_done == 0:
+                    budget = self._free_kv_bytes(slot)
+                    ok = sch.gating_decision(
+                        req, slot.offline, self.pm,
+                        evict_probability=self._evict_probability(),
+                        horizon_seconds=self.gating_horizon,
+                        mem_budget_bytes=budget)
+                    if not ok:
+                        continue
+            self.offline_queue.remove(entry)
+            return entry
+        return None
+
+    def _preempt_probe(self, slot: EngineSlot, now: float, est_latency: float):
+        """§3.4.1 layer-level interruption predicate. Wall mode polls the
+        live queue/arrival feed; virtual mode interrupts at the first layer
+        boundary past the next online arrival's timestamp (deterministic)."""
+        if not self.clock.virtual:
+            return lambda: bool(self.online_queue) or self.incoming_online()
+        layer_dt = est_latency / max(self.cfg.num_layers, 1)
+        nxt = self._next_online_arrival()
+        polls = [0]
+
+        def probe() -> bool:
+            polls[0] += 1
+            if self.online_queue:
+                return True
+            boundary = now + polls[0] * layer_dt
+            return nxt is not None and nxt <= boundary
+
+        return probe
+
+    # ------------------------------------------------------------------
+    # placement, migration, eviction (bottleneck-guided, §3.4.1/§3.4.3)
+    # ------------------------------------------------------------------
+    def _free_kv_bytes(self, slot: EngineSlot) -> float:
+        cache = slot.engine.cache
+        return (cache.allocator.free_pages * cache.page_size
+                * max(self.pm.kv_bytes_per_token(), 1.0))
+
+    def _pool_kv_bytes(self, slot: EngineSlot) -> float:
+        cache = slot.engine.cache
+        return (cache.num_pages * cache.page_size
+                * max(self.pm.kv_bytes_per_token(), 1.0))
+
+    def _place_on_strict(self, req: Request, src: EngineSlot) -> float:
+        """Push a prefilled request to the strict pool (most free KV pages
+        wins), evicting offline victims on the destination if needed. If no
+        strict engine can hold it even after eviction, it decodes in place
+        on the source engine (never dropped)."""
+        n = src.engine.cache.lengths[req.rid]
+        dst = max(self.strict_pool,
+                  key=lambda s: s.engine.cache.allocator.free_pages)
+        if not dst.engine.cache.can_fit(n) and req.kind == Kind.ONLINE:
+            # only online work may evict offline victims to claim space
+            need = (dst.engine.cache.pages_for(n)
+                    - dst.engine.cache.allocator.free_pages) \
+                * dst.engine.cache.page_size
+            self._evict_from(dst, need)
+        if not dst.engine.cache.can_fit(n):
+            if req.kind == Kind.ONLINE:
+                src.online.append(req)   # decode in place, never dropped
+            else:
+                self.place_queue.append((req, src))
+            return 0.0
+        return self._migrate(req, src, dst)
+
+    def _retry_placements(self) -> None:
+        """Drain parked offline placements as strict capacity frees up."""
+        for entry in list(self.place_queue):
+            req, src = entry
+            if req.done:
+                self.place_queue.remove(entry)
+                continue
+            dst = max(self.strict_pool,
+                      key=lambda s: s.engine.cache.allocator.free_pages)
+            if dst.engine.cache.can_fit(src.engine.cache.lengths[req.rid]):
+                self.place_queue.remove(entry)
+                self._migrate(req, src, dst)
+
+    def _migrate(self, req: Request, src: EngineSlot, dst: EngineSlot) -> float:
+        """Real KV movement between engines (RDMA->ICI analogue): gather the
+        request's pages out of the source pool, scatter into freshly
+        allocated pages on the destination."""
+        k, v, n = src.engine.migrate_out(req.rid)
+        dst.engine.migrate_in(req.rid, req, src.engine.token_buf[req.rid],
+                              k, v, n,
+                              sampling=src.engine.req_sampling.pop(req.rid, None))
+        src.engine.requests.pop(req.rid, None)
+        src.engine.token_buf.pop(req.rid, None)
+        (dst.online if req.kind == Kind.ONLINE else dst.offline).append(req)
+        self.metrics.migrations += 1
+        return self.pm.migration_seconds(req.context_len) \
+            if self.clock.virtual else 0.0
+
+    def _evict_from(self, slot: EngineSlot, need_tokens: float,
+                    exclude: set[int] | None = None) -> None:
+        """§3.4.1 bottleneck-aware victim selection on a real engine: free
+        >= need_tokens of KV by evicting offline decodes (recompute later)."""
+        if need_tokens <= 0:
+            return
+        exclude = exclude or set()
+        candidates = [r for r in slot.offline if r.rid not in exclude]
+        victims = sch.select_eviction_victims(
+            candidates, int(np.ceil(need_tokens)), slot.last_bottleneck)
+        eng = slot.engine
+        for r in victims:
+            slot.offline.remove(r)
+            toks = eng.token_buf[r.rid][: r.prompt_len]
+            eng.evict(r.rid)       # frees pages, counts recompute_tokens
+            eng.requests.pop(r.rid, None)
+            eng.token_buf.pop(r.rid, None)
+            # recompute from scratch: greedy replay regenerates the same
+            # tokens; the waste is tracked in recompute_tokens
+            r.generated = 0
+            r.prefill_layers_done = 0
+            self.offline_queue.append((r, toks, None))
+            self.metrics.evictions += 1
+
+    def _evict_probability(self) -> float:
+        if not self.strict_pool:
+            return 0.0
+        return 0.5 * sum(s.pressure for s in self.strict_pool) / len(self.strict_pool)
+
+    # ------------------------------------------------------------------
+    # decode rounds
+    # ------------------------------------------------------------------
+    def _strict_round(self, slot: EngineSlot, now: float) -> float:
+        cost, batch = self._decode_slot(slot, now, relaxed=False,
+                                        want_batch=True)
+        if self.policy == "ooco" and batch:
+            cost += self._pull_migration(slot, batch)
+        return cost
+
+    def _effective_slo(self, online, offline) -> float:
+        """ooco mix-decoding SLO bound. Virtual mode: the perf model IS the
+        clock, use the SLO directly. Wall mode: scale by the observed /
+        predicted latency ratio (measured-latency calibration, PR 1)."""
+        if self.clock.virtual:
+            return self.slo_tpot
+        sample = [r.context_len for r in (list(online) + list(offline)[:1])] or [8]
+        pred = self.pm.decode_estimate(sample).latency or 1e-6
+        scale = self.measured_tpot / pred
+        return self.slo_tpot / max(scale, 1e-6)
+
+    def _online_priority_cap(self) -> int:
+        """Static decode-batch cap calibrated once at a conservative long
+        context (HyGen/Echo-style heuristic baseline, paper §5.1.4)."""
+        if self._op_cap is None:
+            p95 = 1024
+            lo, hi = 1, 4096
+            while lo < hi:
+                mid = (lo + hi + 1) // 2
+                if self.pm.decode_estimate([p95] * mid).latency <= self.slo_tpot:
+                    lo = mid
+                else:
+                    hi = mid - 1
+            self._op_cap = lo
+        return self._op_cap
+
+    def _select_batch(self, slot: EngineSlot, relaxed: bool) -> list[Request]:
+        online, offline = slot.online, slot.offline
+        if relaxed:
+            return online + offline[: self.relaxed_decode_cap]
+        if self.policy == "base_pd":
+            return online + offline
+        if self.policy == "online_priority":
+            cap = self._online_priority_cap()
+            rest = sorted(offline, key=lambda r: r.context_len)
+            return (online + rest)[: max(cap, len(online))]
+        return sch.mix_decoding_selection(
+            online, offline, self._effective_slo(online, offline), self.pm,
+            rng=self.rng, mem_budget_bytes=self._pool_kv_bytes(slot))
+
+    def _fit_batch(self, slot: EngineSlot, batch: list[Request]) -> list[Request]:
+        """Page-budget admission for this decode step: online rows may evict
+        offline residents to grow their tables; offline rows that do not fit
+        just sit out the round (no OutOfPagesError on the hot path)."""
+        cache = slot.engine.cache
+        out: list[Request] = []
+        need = 0
+        for r in batch:
+            if r.rid not in slot.engine.requests:
+                continue   # evicted mid-fit by an earlier online row
+            inc = cache.pages_for(r.context_len) - len(cache.tables.get(r.rid, []))
+            free = cache.allocator.free_pages
+            if need + inc <= free:
+                out.append(r)
+                need += inc
+                continue
+            if r.kind == Kind.ONLINE:
+                shortfall = (need + inc - free) * cache.page_size
+                self._evict_from(slot, shortfall,
+                                 exclude={x.rid for x in out} | {r.rid})
+                if need + inc <= cache.allocator.free_pages:
+                    out.append(r)
+                    need += inc
+        if not out and batch:
+            # full pool with nothing admissible: vLLM-style recompute
+            # preemption — evict other offline residents to unblock the
+            # head request, so a fully-offline engine never deadlocks
+            r = batch[0]
+            inc = cache.pages_for(r.context_len) - len(cache.tables.get(r.rid, []))
+            self._evict_from(
+                slot, (inc - cache.allocator.free_pages) * cache.page_size,
+                exclude={r.rid})
+            if r.rid in slot.engine.requests and inc <= cache.allocator.free_pages:
+                out = [r]
+        return out
+
+    def _decode_slot(self, slot: EngineSlot, now: float, *, relaxed: bool,
+                     want_batch: bool = False):
+        slot.online = [r for r in slot.online if not r.done]
+        slot.offline = [r for r in slot.offline if not r.done]
+        empty = ((0.0, []) if want_batch else 0.0)
+        if not slot.online and not slot.offline:
+            return empty
+        batch = self._select_batch(slot, relaxed)
+        batch = self._fit_batch(slot, batch)
+        if not batch:
+            return empty
+        est = self.pm.decode_estimate([r.context_len for r in batch])
+        slot.last_bottleneck = est.bottleneck
+        if not relaxed:
+            online_lat = (self.pm.decode_estimate(
+                [r.context_len for r in slot.online]).latency
+                if slot.online else 0.0)
+            slot.pressure = 0.9 * slot.pressure + 0.1 * min(
+                online_lat / self.slo_tpot, 1.0)
+        virtual = self.clock.virtual
+        before = [r.decode_time_sum for r in batch] if virtual else None
+        t0 = time.perf_counter()
+        slot.engine.decode_step([r.rid for r in batch])
+        dt = time.perf_counter() - t0
+        step_lat = est.latency if virtual else dt
+        if virtual:
+            # the engine charged measured wall time; replace with modeled
+            # time so TPOT metrics are bit-deterministic across replays
+            for r, b in zip(batch, before):
+                r.decode_time_sum = b + est.latency
+        if not relaxed:
+            self.measured_tpot = 0.8 * self.measured_tpot + 0.2 * step_lat
+        for r in batch:
+            if r.done:
+                self._finish(r, slot.engine, now + step_lat)
+        return (step_lat, batch) if want_batch else step_lat
+
+    def _pull_migration(self, slot: EngineSlot, batch: list[Request]) -> float:
+        """§3.4.3 pull-model migration: a strict engine with SLO headroom
+        computes its bottleneck-filling length preference (Alg. 1) and
+        absorbs matching offline decodes from the relaxed pool. Returns the
+        modeled transfer cost (charged to the strict round — pulls are not
+        free under the virtual clock)."""
+        all_included = len(batch) == slot.resident
+        pref = sch.migration_decision(
+            batch, all_included,
+            self.slo_tpot if self.clock.virtual
+            else self._effective_slo(slot.online, slot.offline),
+            self.pm, mem_budget_bytes=self._free_kv_bytes(slot))
+        if pref is None:
+            return 0.0
+        src_of = {r.rid: rs for rs in self.relaxed_pool
+                  for r in rs.offline if not r.done}
+        chosen = sch.select_for_migration(
+            [r for rs in self.relaxed_pool for r in rs.offline if not r.done],
+            pref)
+        cost = 0.0
+        for r in chosen:
+            src = src_of[r.rid]
+            if not slot.engine.cache.can_fit(src.engine.cache.lengths[r.rid]):
+                break
+            src.offline.remove(r)
+            cost += self._migrate(r, src, slot)
+            self.metrics.pulls += 1
+        return cost
+
+    # ------------------------------------------------------------------
+    def _finish(self, req: Request, eng: ServingEngine, t: float) -> None:
+        req.phase = Phase.FINISHED
+        req.finish_time = t
+        self.tokens[req.rid] = eng.token_buf[req.rid].tolist()
+        self.finished.append(req)
+
+    # ------------------------------------------------------------------
+    # trace-driven event loop
+    # ------------------------------------------------------------------
+    def run(self, online: list[TraceRequest], offline: list[TraceRequest], *,
+            duration: float | None = None, max_prompt: int = 64,
+            max_output: int = 32, drain: bool = True,
+            max_rounds: int = 200_000) -> dict:
+        """Admit trace arrivals, step the pools until the work drains (or
+        ``duration`` in no-drain mode), return the metrics summary.
+
+        Prompt tokens are synthesized deterministically from ``seed`` and
+        quantized to multiples of 8 (bounds jit-compilation variants);
+        arrivals after ``duration`` are dropped. Idle rounds skip to the
+        next arrival — virtually (clock jump) or by sleeping (wall)."""
+        rng = np.random.default_rng(self.seed)
+        self.clock.reset()   # construction/compile time is not trace time
+        pending = sorted(
+            [(t.arrival, 0, i, t) for i, t in enumerate(online)]
+            + [(t.arrival, 1, i, t) for i, t in enumerate(offline)])
+        if duration is not None:
+            pending = [p for p in pending if p[0] <= duration]
+        self._next_online_arrival = lambda: next(
+            (p[0] for p in pending if p[1] == 0), None)
+        # scan past any due offline arrivals: an online request queued
+        # behind them must still trigger the §3.4.1 wall-mode probe
+        self.incoming_online = lambda: any(
+            p[0] <= self.clock.now() for p in pending if p[1] == 0)
+        hard_cap = 10 * duration if duration else float("inf")
+
+        def make_tokens(n: int) -> list[int]:
+            n = int(np.clip(-(-n // 8) * 8, 8, max_prompt))
+            return [int(x) for x in rng.integers(0, self.cfg.vocab_size, n)]
+
+        while True:
+            now = self.clock.now()
+            while pending and pending[0][0] <= now:
+                arr, kcode, _, t = pending.pop(0)
+                kind = Kind.ONLINE if kcode == 0 else Kind.OFFLINE
+                toks = make_tokens(t.prompt_len)
+                req = Request(kind, arr, len(toks),
+                              max(min(t.output_len, max_output), 1))
+                self.submit(req, toks)
+            if duration is not None and now >= duration and not drain:
+                break
+            if now > hard_cap or self.metrics.rounds >= max_rounds:
+                break
+            worked = self.step()
+            if not worked:
+                if pending:
+                    self.metrics.idle_rounds += 1
+                    self.clock.idle_until(pending[0][0])
+                    continue
+                break
+        return self.summary()
+
+    # ------------------------------------------------------------------
+    def summary(self) -> dict:
+        """TTFT/TPOT percentiles, SLO attainment, offline goodput, and the
+        preemption/migration/eviction counters — the policy-comparison
+        record (deterministic under the virtual clock: no wall times)."""
+        elapsed = max(self.clock.now(), 1e-9)
+        online = [r for r in self.all_requests if r.kind == Kind.ONLINE]
+        offline = [r for r in self.all_requests if r.kind == Kind.OFFLINE]
+        ttfts = [r.ttft() for r in online if r.ttft() is not None]
+        tpots = [r.avg_tpot() for r in online if r.avg_tpot() is not None]
+        viol = sum(1 for r in online
+                   if r.violates(self.slo_ttft, self.slo_tpot, now=elapsed))
+        off_tokens = int(sum(r.generated for r in offline))
+        preempt = sum(s.engine.stats.preemptions for s in self.relaxed_pool)
+        return {
+            "policy": self.policy,
+            "n_strict": len(self.strict_pool),
+            "n_relaxed": len(self.relaxed_pool),
+            "clock": "virtual" if self.clock.virtual else "wall",
+            "elapsed": float(elapsed),
+            "online_requests": len(online),
+            "online_finished": sum(1 for r in online if r.done),
+            "online_slo_attainment": 1.0 - viol / max(len(online), 1),
+            "online_ttft_p50": _pct(ttfts, 50),
+            "online_ttft_p99": _pct(ttfts, 99),
+            "online_tpot_p50": _pct(tpots, 50),
+            "online_tpot_p99": _pct(tpots, 99),
+            "offline_requests": len(offline),
+            "offline_finished": sum(1 for r in offline if r.done),
+            "offline_tokens": off_tokens,
+            "offline_tokens_per_s": off_tokens / elapsed,
+            "recompute_tokens": int(sum(r.recompute_tokens
+                                        for r in self.all_requests)),
+            "preemptions": int(preempt),
+            "migrations": self.metrics.migrations,
+            "pulls": self.metrics.pulls,
+            "evictions": self.metrics.evictions,
+            "rounds": self.metrics.rounds,
+            "idle_rounds": self.metrics.idle_rounds,
+        }
+
+    def finished_signature(self) -> list[tuple]:
+        """Trace-stable identity of every finished request + its full token
+        stream (rids are process-global, so determinism tests compare this)."""
+        return sorted(
+            (r.kind.value, round(r.arrival, 9), r.prompt_len, r.output_len,
+             tuple(self.tokens.get(r.rid, ())))
+            for r in self.finished)

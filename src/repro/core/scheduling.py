@@ -189,15 +189,19 @@ def select_eviction_victims(
 
     compute-bound node: evict FEW LONG requests (preserves decode batch
     size, which is what compute efficiency depends on); otherwise evict
-    SHORT ones (cheap recompute). Paper §3.4.1."""
+    SHORT ones (cheap recompute). Paper §3.4.1.
+
+    Online requests are never eviction victims, even if the caller passes a
+    mixed resident list (§3.4.1 evicts offline work only)."""
+    candidates = [r for r in offline_running if r.kind is not Kind.ONLINE]
     key = (lambda r: -r.context_len) if bottleneck == "compute" else (lambda r: r.context_len)
     victims, freed = [], 0
-    for r in sorted(offline_running, key=key):
+    for r in sorted(candidates, key=key):
         if freed >= needed_tokens:
             break
         victims.append(r)
         freed += r.context_len
-    return victims if freed >= needed_tokens else list(offline_running)
+    return victims if freed >= needed_tokens else candidates
 
 
 # ---------------------------------------------------------------------------

@@ -164,7 +164,8 @@ class ServingEngine:
     def __init__(self, model: Transformer, params, *, num_pages: int = 512,
                  page_size: int = 16, decode_buckets: tuple[int, ...] = (1, 2, 4, 8, 16, 32),
                  perf_model: PerfModel | None = None, backend: str = "auto",
-                 sampling: SamplingParams | None = None):
+                 sampling: SamplingParams | None = None,
+                 kernels_from: "ServingEngine | None" = None):
         cfg = model.cfg
         assert not cfg.local_global and not cfg.sliding_window, \
             "engine supports full-attention archs (cluster-scale behaviour of " \
@@ -182,15 +183,32 @@ class ServingEngine:
         self.partial: dict[int, PartialPrefill] = {}
         self.req_sampling: dict[int, tuple[float, int]] = {}
         self.stats = EngineStats()
-        self._layer_fn = self._build_layer_fn()
-        self._embed_fn = jax.jit(lambda p, t: model._embed(p, t))
-        self._logits_fn = jax.jit(lambda p, x: model._logits(p, x))
-        self._sample_fn = jax.jit(sample_tokens)
-        self._decode_fns: dict[tuple[int, int], Callable] = {}
-        # per-layer params sliced once (not jax.tree.map per layer per prefill)
-        self._layer_params_cached = [
-            jax.tree.map(lambda a, i=i: a[i], params["layers"])
-            for i in range(cfg.num_layers)]
+        if kernels_from is not None:
+            # Pool runtimes run N+M engines over the SAME weights; the jitted
+            # step functions only close over (model, cfg, page_size, backend),
+            # so sibling engines can share one compiled-kernel set instead of
+            # re-tracing/compiling per engine.
+            src = kernels_from
+            assert (src.model is model and src.params is params
+                    and src.cache.page_size == page_size
+                    and src.backend == self.backend), \
+                "kernel sharing requires identical model/params/page_size/backend"
+            self._layer_fn = src._layer_fn
+            self._embed_fn = src._embed_fn
+            self._logits_fn = src._logits_fn
+            self._sample_fn = src._sample_fn
+            self._decode_fns = src._decode_fns
+            self._layer_params_cached = src._layer_params_cached
+        else:
+            self._layer_fn = self._build_layer_fn()
+            self._embed_fn = jax.jit(lambda p, t: model._embed(p, t))
+            self._logits_fn = jax.jit(lambda p, x: model._logits(p, x))
+            self._sample_fn = jax.jit(sample_tokens)
+            self._decode_fns: dict[tuple[int, int], Callable] = {}
+            # per-layer params sliced once (not jax.tree.map per layer per prefill)
+            self._layer_params_cached = [
+                jax.tree.map(lambda a, i=i: a[i], params["layers"])
+                for i in range(cfg.num_layers)]
         self._base_key = jax.random.PRNGKey(self.sampling.seed)
         self._sample_step = 0
 

@@ -1,210 +1,104 @@
 """Serving launcher: real OOCO co-located serving on this host (CPU-scale).
 
-Composes one latency-relaxed + one latency-strict ServingEngine (the paper's
-1+1 evaluation topology), drives them with a trace, and applies the OOCO
-scheduling points with *measured* step latencies feeding the SLO decisions.
+Drives the pool-based runtime (``repro.cluster.runtime.PoolRuntime``):
+N latency-strict + M latency-relaxed ServingEngines, the OOCO scheduling
+points (§3.4) routed through the roofline perf model, and a pluggable clock
+— wall-clock for live serving, virtual clock for deterministic trace replay
+(same seed → bit-identical token streams and metrics JSON).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-7b --policy ooco \
-      --duration 30 --online-qps 0.5 --offline-qps 1.0
+      --strict 1 --relaxed 2 --virtual-clock --duration 20
 """
 from __future__ import annotations
 
 import argparse
-import random
-import time
+import json
+import sys
 
-import jax
-import numpy as np
-
+from repro.cluster.runtime import (POLICIES, PoolRuntime, VirtualClock,
+                                   WallClock, replay_hw)
 from repro.configs import get_config
-from repro.core import scheduling as sch
-from repro.core.hardware import cpu_measured
-from repro.core.perf_model import PerfModel
-from repro.core.request import Kind, Phase, Request
 from repro.data import traces as tr
-from repro.engine.engine import ServingEngine
-from repro.models.model import build_model
 
 
-class CoLocatedServer:
-    """1 relaxed + 1 strict engine + the OOCO scheduling points (§3.4)."""
+class CoLocatedServer(PoolRuntime):
+    """PR-1 compatibility wrapper: the fixed 1-relaxed + 1-strict topology
+    as a special case of the pool runtime (same ``submit``/``step`` API)."""
 
     def __init__(self, cfg, *, policy: str = "ooco", slo_tpot: float = 1.0,
                  num_pages: int = 1024, page_size: int = 16, seed: int = 0,
                  backend: str = "auto"):
-        self.cfg = cfg
-        self.policy = policy
-        self.slo_tpot = slo_tpot
-        self.backend = backend
-        self.clock = time.perf_counter  # drivers override with trace-relative time
-        # §3.4.1: the layer-level preemption predicate polls this between
-        # transformer layers. Drivers wire it to their live arrival feed
-        # (a real deployment polls the RPC queue); default checks only the
-        # already-submitted queue.
-        self.incoming_online = lambda: False
-        model = build_model(cfg, remat=False)
-        params = model.init(jax.random.PRNGKey(seed))
-        # one decode bucket bounds jit-compilation variants on cold start
-        self.relaxed = ServingEngine(model, params, num_pages=num_pages,
-                                     page_size=page_size, decode_buckets=(8,),
-                                     backend=backend)
-        self.strict = ServingEngine(model, params, num_pages=num_pages,
-                                    page_size=page_size, decode_buckets=(8,),
-                                    backend=backend)
-        self.pm = PerfModel(cfg, cpu_measured())
-        self.rng = random.Random(seed)
-        self.online_queue: list[tuple[Request, list[int]]] = []
-        self.offline_queue: list[tuple[Request, list[int]]] = []
-        self.strict_online: list[Request] = []
-        self.strict_offline: list[Request] = []
-        self.relaxed_offline: list[Request] = []
-        self.finished: list[Request] = []
-        self.measured_tpot: float = slo_tpot / 4  # running estimate
+        super().__init__(cfg, policy=policy, n_strict=1, n_relaxed=1,
+                         clock=WallClock(), slo_tpot=slo_tpot,
+                         num_pages=num_pages, page_size=page_size, seed=seed,
+                         backend=backend, decode_buckets=(8,))
 
-    def submit(self, req: Request, tokens: list[int]) -> None:
-        q = self.online_queue if req.kind == Kind.ONLINE else self.offline_queue
-        q.append((req, tokens))
+    @property
+    def relaxed(self):
+        return self.relaxed_pool[0].engine
 
-    # ------------------------------------------------------------------
-    def _prefill_one(self) -> bool:
-        """One prefill action on the relaxed engine; returns True if it did work."""
-        if self.online_queue:
-            req, toks = self.online_queue.pop(0)
-            self.relaxed.add_request(req, toks)
-            self.relaxed.prefill(req.rid)
-            req.first_token_time = self.clock()
-            self._migrate_to_strict(req)
-            return True
-        if self.offline_queue:
-            req, toks = self.offline_queue.pop(0)
-            # §3.4.1: interrupt offline prefill the moment online work arrives
-            preempt = (lambda: bool(self.online_queue) or self.incoming_online()) \
-                if self.policy == "ooco" else None
-            self.relaxed.add_request(req, toks)
-            status = self.relaxed.prefill(req.rid, should_preempt=preempt)
-            if status == "preempted":
-                req.phase = Phase.QUEUED
-                self.offline_queue.insert(0, (req, toks))
-                return True
-            req.first_token_time = req.first_token_time or self.clock()
-            if self.policy == "ooco":
-                self.relaxed_offline.append(req)   # decode on relaxed until pulled
-            else:
-                self._migrate_to_strict(req)
-            return True
-        return False
-
-    def _migrate_to_strict(self, req: Request) -> None:
-        k, v, n = self.relaxed.migrate_out(req.rid)
-        self.strict.migrate_in(req.rid, req, self.relaxed.token_buf[req.rid],
-                               k, v, n,
-                               sampling=self.relaxed.req_sampling.pop(req.rid, None))
-        (self.strict_online if req.kind == Kind.ONLINE
-         else self.strict_offline).append(req)
-
-    def _strict_step(self) -> None:
-        self.strict_online = [r for r in self.strict_online if not r.done]
-        self.strict_offline = [r for r in self.strict_offline if not r.done]
-        online, offline = self.strict_online, self.strict_offline
-        if not online and not offline:
-            return
-        if self.policy == "base_pd":
-            batch = online + offline
-        elif self.policy == "online_priority":
-            batch = online + offline[: max(0, 4 - len(online))]
-        else:
-            # measured-latency calibrated mix decoding: scale the perf-model
-            # SLO bound by the observed/predicted latency ratio
-            pred = self.pm.decode_estimate(
-                [r.context_len for r in online + offline[:1]]).latency or 1e-6
-            scale = self.measured_tpot / pred
-            batch = sch.mix_decoding_selection(
-                online, offline, self.slo_tpot / max(scale, 1e-6), self.pm,
-                rng=self.rng)
-        t0 = time.perf_counter()
-        self.strict.decode_step([r.rid for r in batch])
-        dt = time.perf_counter() - t0
-        self.measured_tpot = 0.8 * self.measured_tpot + 0.2 * dt
-        for r in batch:
-            if r.done:
-                self.finished.append(r)
-
-    def _relaxed_decode_step(self) -> None:
-        self.relaxed_offline = [r for r in self.relaxed_offline if not r.done]
-        if not self.relaxed_offline:
-            return
-        batch = self.relaxed_offline[:16]
-        self.relaxed.decode_step([r.rid for r in batch])
-        # §3.4.3 pull: strict node absorbs offline decodes when it has headroom
-        if self.measured_tpot < 0.5 * self.slo_tpot and self.strict_online:
-            pref = sch.select_for_migration(
-                batch, sch.LengthPreference(batch[0].context_len, "shortest", 1))
-            for r in pref:
-                if r.done:
-                    continue
-                self.relaxed_offline.remove(r)
-                self._migrate_to_strict(r)
-        for r in batch:
-            if r.done:
-                self.finished.append(r)
-
-    def step(self) -> None:
-        """One co-located scheduling round (prefill + both decode pools)."""
-        self._prefill_one()
-        self._strict_step()
-        if self.policy == "ooco":
-            self._relaxed_decode_step()
+    @property
+    def strict(self):
+        return self.strict_pool[0].engine
 
 
-def main():
+def build_traces(args, cfg):
+    online = tr.online_trace("ooc", duration=args.duration,
+                             mean_qps=args.online_qps, seed=args.seed)
+    n_off = max(int(args.offline_qps * args.duration), 1)
+    offline = tr.with_uniform_qps(tr.offline_requests(n_off, seed=args.seed + 1),
+                                  args.offline_qps)
+    return online, offline
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-7b")
-    ap.add_argument("--policy", default="ooco",
-                    choices=["base_pd", "online_priority", "ooco"])
+    ap.add_argument("--policy", default="ooco", choices=list(POLICIES))
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "pallas", "interpret", "ref"],
                     help="attention backend: auto = Pallas kernels on TPU, "
                          "XLA/jnp reference on CPU")
+    ap.add_argument("--strict", type=int, default=1,
+                    help="latency-strict pool size (decode under TPOT SLO)")
+    ap.add_argument("--relaxed", type=int, default=1,
+                    help="latency-relaxed pool size (prefill + offline decode)")
+    ap.add_argument("--virtual-clock", action="store_true",
+                    help="deterministic trace replay: time advances by the "
+                         "perf model instead of the wall clock")
     ap.add_argument("--duration", type=float, default=20.0)
     ap.add_argument("--online-qps", type=float, default=0.5)
     ap.add_argument("--offline-qps", type=float, default=1.0)
+    ap.add_argument("--slo-ttft", type=float, default=2.0)
+    ap.add_argument("--slo-tpot", type=float, default=0.05)
+    ap.add_argument("--num-pages", type=int, default=1024)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--max-prompt", type=int, default=64)
+    ap.add_argument("--max-output", type=int, default=32)
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the metrics summary to this path")
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
-    server = CoLocatedServer(cfg, policy=args.policy, backend=args.backend)
-    rng = np.random.default_rng(args.seed)
-    online = tr.online_trace("ooc", duration=args.duration,
-                             mean_qps=args.online_qps, seed=args.seed)
-    n_off = int(args.offline_qps * args.duration)
-    offline = tr.with_uniform_qps(tr.offline_requests(n_off), args.offline_qps)
-
-    def toks(n):
-        return list(rng.integers(0, cfg.vocab_size, max(min(n, 64), 4)))
-
-    pending = sorted(
-        [(t.arrival, Kind.ONLINE, t) for t in online]
-        + [(t.arrival, Kind.OFFLINE, t) for t in offline])
-    t0 = time.perf_counter()
-    while time.perf_counter() - t0 < args.duration or pending:
-        now = time.perf_counter() - t0
-        while pending and pending[0][0] <= now:
-            _, kind, t = pending.pop(0)
-            p = toks(t.prompt_len)
-            req = Request(kind, now, len(p), min(t.output_len, 32))
-            server.submit(req, p)
-        server.step()
-        if now > args.duration:
-            break
-    on = [r for r in server.finished if r.kind == Kind.ONLINE]
-    off = [r for r in server.finished if r.kind == Kind.OFFLINE]
-    off_tokens = sum(r.generated for r in off)
-    print(f"policy={args.policy} finished online={len(on)} offline={len(off)} "
-          f"offline_tokens={off_tokens} "
-          f"offline_tok/s={off_tokens / args.duration:.1f} "
-          f"preemptions={server.relaxed.stats.preemptions}")
+    clock = VirtualClock() if args.virtual_clock else WallClock()
+    hw = replay_hw() if args.virtual_clock else None
+    runtime = PoolRuntime(cfg, policy=args.policy, n_strict=args.strict,
+                          n_relaxed=args.relaxed, clock=clock,
+                          slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot,
+                          num_pages=args.num_pages, seed=args.seed,
+                          backend=args.backend, hw=hw)
+    online, offline = build_traces(args, cfg)
+    summary = runtime.run(online, offline, duration=args.duration,
+                          max_prompt=args.max_prompt,
+                          max_output=args.max_output)
+    blob = json.dumps(summary, sort_keys=True, indent=2)
+    print(blob)
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            f.write(blob + "\n")
+    return summary
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -150,6 +150,59 @@ class TestSampler:
         assert all(0 <= t < cfg.vocab_size for t in a)
 
 
+class TestCrossEngineMigration:
+    def test_mid_decode_migration_token_parity(self, setup):
+        """A request migrated relaxed→strict mid-decode must produce the
+        identical token sequence as one decoded on a single engine (the
+        pool runtime's KV movement is bit-transparent)."""
+        cfg, model, params = setup
+        prompt = list(np.random.RandomState(4).randint(0, cfg.vocab_size, 12))
+        ref, _ = _generate(model, params, [prompt], 8, backend="ref")
+
+        a = ServingEngine(model, params, num_pages=64, page_size=8,
+                          decode_buckets=(4,), backend="ref")
+        b = ServingEngine(model, params, num_pages=64, page_size=8,
+                          decode_buckets=(4,), backend="ref", kernels_from=a)
+        r = Request(Kind.OFFLINE, 0.0, len(prompt), 8)
+        a.add_request(r, prompt)
+        assert a.prefill(r.rid) == "done"
+        for _ in range(3):                      # decode part-way on engine A
+            a.decode_step([r.rid])
+        k, v, n = a.migrate_out(r.rid)
+        b.migrate_in(r.rid, r, a.token_buf[r.rid], k, v, n)
+        while not r.done:                       # finish on engine B
+            b.decode_step([r.rid])
+        assert b.token_buf[r.rid].tolist() == ref[0]
+
+    def test_migration_after_interrupted_prefill_parity(self, setup):
+        """Interrupt-resume prefill, then migrate mid-decode: still token-
+        identical (partial-prefill KV segments survive the engine hop)."""
+        cfg, model, params = setup
+        prompt = list(np.random.RandomState(5).randint(0, cfg.vocab_size, 15))
+        ref, _ = _generate(model, params, [prompt], 6, backend="ref")
+
+        a = ServingEngine(model, params, num_pages=64, page_size=8,
+                          decode_buckets=(4,), backend="ref")
+        b = ServingEngine(model, params, num_pages=64, page_size=8,
+                          decode_buckets=(4,), backend="ref", kernels_from=a)
+        r = Request(Kind.OFFLINE, 0.0, len(prompt), 6)
+        a.add_request(r, prompt)
+        n_polls = [0]
+
+        def preempt():
+            n_polls[0] += 1
+            return n_polls[0] == 1
+
+        assert a.prefill(r.rid, should_preempt=preempt) == "preempted"
+        assert a.prefill(r.rid) == "done"
+        a.decode_step([r.rid])
+        k, v, n = a.migrate_out(r.rid)
+        b.migrate_in(r.rid, r, a.token_buf[r.rid], k, v, n)
+        while not r.done:
+            b.decode_step([r.rid])
+        assert b.token_buf[r.rid].tolist() == ref[0]
+
+
 class TestTokenRing:
     def test_list_semantics(self):
         ring = TokenRing([1, 2, 3], capacity=4)
