@@ -172,7 +172,9 @@ def write_bench_json(result, path="BENCH_colocation.json"):
             "Real pool-runtime policy comparison: one bursty synthetic trace "
             "(ooc stats) replayed per policy through PoolRuntime under the "
             "virtual clock (real JAX engines, perf-model time — "
-            "deterministic). Acceptance: ooco offline tokens/s > "
+            "deterministic), with chunked prefill enabled (fused mixed "
+            "steps, roofline-guided auto token budgets, §3.4.1 preemption "
+            "at chunk boundaries). Acceptance: ooco offline tokens/s > "
             "online_priority at equal-or-better online SLO attainment; "
             "base_pd violates the TPOT SLO. Reproduce: PYTHONPATH=src "
             "python benchmarks/bench_colocation.py [--quick]."),

@@ -6,6 +6,22 @@ measure its real max-rate throughput (reduced model), and report the perf
 model's *projection* of the same workload onto TPU v5e — the number the
 cluster simulation uses — so the two layers of the reproduction are tied
 together.
+
+``run_fused_vs_serial`` adds the chunked-prefill comparison in the regime
+chunking exists for — a resident decode batch streaming tokens while a new
+prompt lands chunk by chunk:
+
+* ``serialized`` — each prefill chunk is its own dispatch followed by a
+  separate decode dispatch (the residents stall while the chunk runs —
+  prefill-then-decode serialization at chunk granularity).
+* ``fused`` — one ``mixed_step`` dispatch lands the chunk AND decodes the
+  residents (donated KV pools on both paths); decode never stalls.
+
+Both modes run identical math (same chunks, same decode steps); the paired
+interleaved trials + medians make the comparison robust to host noise. The
+report includes the fused-path donation proof from the lowered HLO
+(2 aliased pool args, no full-pool copies) — the record behind the
+mixed-step row of ``BENCH_engine.json``.
 """
 from __future__ import annotations
 
@@ -22,24 +38,84 @@ from repro.engine.engine import ServingEngine
 from repro.models.model import build_model
 
 
-def run_engine_throughput(arch="qwen2.5-7b", n_requests=24, prompt_len=64,
-                          output_len=32, seed=0, verbose=True, backend="auto"):
+def _built(arch, seed):
     cfg = get_config(arch).reduced(layers=4, d_model=512, vocab=4096, d_ff=1536)
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(seed))
-    eng = ServingEngine(model, params, num_pages=1024, page_size=16,
-                        decode_buckets=(8, 16, 32), backend=backend)
+    return cfg, model, params
+
+
+def _engine(cfg, model, params, backend, kernels_from=None):
+    return ServingEngine(model, params, num_pages=1024, page_size=16,
+                         decode_buckets=(8, 16, 32), backend=backend,
+                         kernels_from=kernels_from)
+
+
+def _requests(eng, cfg, n, prompt_len, output_len, seed):
     rng = np.random.RandomState(seed)
     reqs = []
-    for _ in range(n_requests):
+    for _ in range(n):
         prompt = list(rng.randint(0, cfg.vocab_size, prompt_len))
         r = Request(Kind.OFFLINE, 0.0, prompt_len, output_len)
         eng.add_request(r, prompt)
         reqs.append(r)
+    return reqs
+
+
+def _paired_rounds(eng, cfg, *, residents=8, trials=8, prompt_len=64,
+                   chunk=16, seed=1):
+    """Chunked-serving comparison, drift-robust: each trial lands one
+    ``prompt_len`` prompt in ``chunk``-token pieces while ``residents``
+    decode, through both schedules back to back on the same engine —
+    serialized = each chunk is its own dispatch followed by a separate
+    decode dispatch (residents stall during the chunk), fused = one
+    ``mixed_step`` dispatch does both. Identical math lands either way
+    (same chunks, same decode steps); the fused win is the dispatch fusion
+    the mixed step exists for. One-output prompts free their pages on
+    completion, so engine state stays comparable across trials. Returns
+    (median_serial_seconds, median_fused_seconds, tokens_per_trial)."""
+    assert prompt_len % chunk == 0
+    n_chunks = prompt_len // chunk
+    res = _requests(eng, cfg, residents, prompt_len, 10 ** 6, seed)
+    for r in res:
+        eng.prefill(r.rid)
+    rids = [r.rid for r in res]
+    # warm pass mirrors one trial exactly, compiling every variant
+    warm = _requests(eng, cfg, 2, prompt_len, 1, seed + 1)
+    for _ in range(n_chunks):
+        eng.mixed_step([], warm[0].rid, chunk)
+        eng.decode_step(rids)
+    for _ in range(n_chunks):
+        eng.mixed_step(rids, warm[1].rid, chunk)
+    serial_dts, fused_dts = [], []
+    for i in range(trials):
+        a, b = _requests(eng, cfg, 2, prompt_len, 1, seed + 2 + i)
+        t0 = time.perf_counter()
+        for _ in range(n_chunks):
+            eng.mixed_step([], a.rid, chunk)   # chunk-only prefill dispatch
+            eng.decode_step(rids)              # residents stalled until here
+        t1 = time.perf_counter()
+        for _ in range(n_chunks):
+            eng.mixed_step(rids, b.rid, chunk)
+        t2 = time.perf_counter()
+        serial_dts.append(t1 - t0)
+        fused_dts.append(t2 - t1)
+        assert a.done and b.done
+    tokens = n_chunks * residents + prompt_len + 1
+    return (float(np.median(serial_dts)), float(np.median(fused_dts)),
+            tokens)
+
+
+def run_engine_throughput(arch="qwen2.5-7b", n_requests=24, prompt_len=64,
+                          output_len=32, seed=0, verbose=True, backend="auto"):
+    """Closed-batch max-rate throughput — the BENCH_engine.json trajectory
+    metric (kept workload-identical across PRs)."""
+    cfg, model, params = _built(arch, seed)
+    eng = _engine(cfg, model, params, backend)
+    reqs = _requests(eng, cfg, n_requests, prompt_len, output_len, seed)
     # warmup compile: prefill one + a decode step
     eng.prefill(reqs[0].rid)
     eng.decode_step([reqs[0].rid])
-
     t0 = time.perf_counter()
     for r in reqs[1:]:
         eng.prefill(r.rid)
@@ -58,4 +134,52 @@ def run_engine_throughput(arch="qwen2.5-7b", n_requests=24, prompt_len=64,
               f"({total_tokens} tokens in {dt:.1f}s)")
         print(f"  perf-model projection (v5e tp=4, batch 256 decode): "
               f"{projected:,.0f} tok/s")
-    return {"cpu_tokens_per_s": tput, "v5e_projected_decode_tokens_per_s": projected}
+    return {"cpu_tokens_per_s": tput,
+            "v5e_projected_decode_tokens_per_s": projected}
+
+
+def mixed_donation_report(eng: ServingEngine) -> dict:
+    """Donation proof for the fused mixed step, from the lowered HLO: the
+    two pool args must alias outputs and no full-pool-shaped copy may
+    survive compilation."""
+    import jax.numpy as jnp
+    fn = eng._mixed_fn(8, 8, 64, 4)
+    zi = jnp.zeros((8,), jnp.int32)
+    lowered = fn.lower(
+        eng.params, zi, zi, jnp.zeros((8, 8), jnp.int32),
+        jnp.ones((8,), jnp.int32), jnp.zeros((64,), jnp.int32),
+        jnp.zeros((2,), jnp.int32), jnp.zeros((4,), jnp.int32),
+        eng.cache.k_pool, eng.cache.v_pool, jax.random.PRNGKey(0),
+        jnp.int32(0), jnp.zeros((9,), jnp.float32), jnp.zeros((9,), jnp.int32))
+    donated = lowered.as_text().count("tf.aliasing_output")
+    dims = ",".join(map(str, eng.cache.k_pool.shape))
+    hlo = lowered.compile().as_text()
+    copies = sum(1 for line in hlo.splitlines()
+                 if "copy(" in line and f"[{dims}]" in line)
+    return {"mixed_donated_args": donated, "mixed_full_pool_copies": copies}
+
+
+def run_fused_vs_serial(arch="qwen2.5-7b", residents=8, trials=8,
+                        prompt_len=64, chunk=16, seed=0, verbose=True,
+                        backend="auto"):
+    """Identical chunked-serving work through both schedules (interleaved
+    paired trials — robust to host noise) + the fused donation proof."""
+    cfg, model, params = _built(arch, seed)
+    eng = _engine(cfg, model, params, backend)
+    t_serial, t_fused, tokens = _paired_rounds(
+        eng, cfg, residents=residents, trials=trials, prompt_len=prompt_len,
+        chunk=chunk, seed=seed + 1)
+    don = mixed_donation_report(eng)
+    out = {
+        "serial_tokens_per_s": tokens / t_serial,
+        "fused_tokens_per_s": tokens / t_fused,
+        "fused_speedup": t_serial / t_fused,
+        **don,
+    }
+    if verbose:
+        print(f"  mixed-step streaming: fused {out['fused_tokens_per_s']:,.0f} vs "
+              f"serial {out['serial_tokens_per_s']:,.0f} tok/s "
+              f"({out['fused_speedup']:.2f}x; donated="
+              f"{don['mixed_donated_args']} "
+              f"pool_copies={don['mixed_full_pool_copies']})")
+    return out

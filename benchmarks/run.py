@@ -1,16 +1,36 @@
 """Benchmark harness — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows per the repo convention.
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME] [--gate]
+
+Exit code: non-zero if any bench errored (rows print ``ERROR ...``) or, with
+``--gate``, if ``bench_engine_throughput`` falls below the regression floor
+derived from the recorded ``BENCH_engine.json`` trajectory.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
+
+_ERRORS: list[str] = []
 
 
 def _row(name, us, derived):
+    if str(derived).startswith("ERROR"):
+        _ERRORS.append(name)
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def engine_throughput_floor(fraction: float = 0.25) -> float:
+    """Regression floor: a fraction of the last recorded cpu_tokens_per_s
+    (CI machines are slower and noisier than the recording host, but a real
+    hot-path regression is 2-10x, far below this floor)."""
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
+    with open(path) as f:
+        rec = json.load(f)
+    return fraction * rec["trajectory"][-1]["cpu_tokens_per_s"]
 
 
 def bench_traces(quick=False):
@@ -55,13 +75,28 @@ def bench_perfmodel_accuracy(quick=False):
          f"O_d={hw.O_d*1e3:.1f}ms")
 
 
-def bench_engine_throughput(quick=False):
-    from benchmarks.bench_engine_throughput import run_engine_throughput
+def bench_engine_throughput(quick=False, gate=False):
+    from benchmarks.bench_engine_throughput import (run_engine_throughput,
+                                                    run_fused_vs_serial)
     t0 = time.perf_counter()
     r = run_engine_throughput(n_requests=8 if quick else 24, verbose=not quick)
+    floor = engine_throughput_floor() if gate else 0.0
+    gated = gate and r["cpu_tokens_per_s"] < floor
     _row("table6_engine_throughput", (time.perf_counter() - t0) * 1e6,
-         f"cpu={r['cpu_tokens_per_s']:.0f}tok/s "
+         (f"ERROR below regression floor {floor:.0f}tok/s: " if gated else "")
+         + f"cpu={r['cpu_tokens_per_s']:.0f}tok/s "
          f"v5e_projected={r['v5e_projected_decode_tokens_per_s']:.0f}tok/s")
+    t0 = time.perf_counter()
+    m = run_fused_vs_serial(trials=4 if quick else 8, verbose=not quick)
+    bad = (m["fused_speedup"] < 1.0 or m["mixed_donated_args"] < 2
+           or m["mixed_full_pool_copies"] > 0)
+    _row("table6_mixed_step", (time.perf_counter() - t0) * 1e6,
+         ("ERROR fused path regressed: " if gate and bad else "")
+         + f"fused={m['fused_tokens_per_s']:.0f} "
+         f"serial={m['serial_tokens_per_s']:.0f}tok/s "
+         f"speedup={m['fused_speedup']:.2f}x "
+         f"donated={m['mixed_donated_args']} "
+         f"pool_copies={m['mixed_full_pool_copies']}")
 
 
 def bench_decode_hotpath(quick=False):
@@ -158,22 +193,30 @@ BENCHES = {
 }
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--gate", action="store_true",
+                    help="fail (exit 1) if engine throughput drops below "
+                         "the floor derived from BENCH_engine.json")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and args.only != name:
             continue
+        kw = {"gate": args.gate} if name == "engine_throughput" else {}
         try:
-            fn(quick=args.quick)
+            fn(quick=args.quick, **kw)
         except Exception as e:  # keep the harness running
             import traceback
             traceback.print_exc()
             _row(name, 0.0, f"ERROR {type(e).__name__}: {e}")
+    if _ERRORS:
+        print(f"FAILED benches: {','.join(_ERRORS)}", flush=True)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

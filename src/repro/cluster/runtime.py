@@ -130,6 +130,9 @@ class EngineSlot:
     engine: ServingEngine
     online: list[Request] = field(default_factory=list)
     offline: list[Request] = field(default_factory=list)
+    # chunk-granular prefills in progress on this engine (KV pinned here);
+    # index 0 is the one currently advancing
+    prefilling: list = field(default_factory=list)
     last_bottleneck: str = "memory"
     pressure: float = 0.0          # strict-pool online-latency EMA (§3.4.2)
 
@@ -147,6 +150,8 @@ class Metrics:
     migrations: int = 0
     pulls: int = 0
     evictions: int = 0
+    chunks: int = 0                # prefill chunks executed (fused rounds)
+    chunk_preemptions: int = 0     # §3.4.1 pauses at chunk boundaries
 
 
 def _pct(xs: list[float], q: float) -> float | None:
@@ -164,12 +169,19 @@ class PoolRuntime:
                  decode_buckets: tuple[int, ...] = (8,),
                  relaxed_decode_cap: int = 16,
                  gating_horizon: float = 20.0,
+                 chunk_tokens: int | str | None = "auto",
                  model=None, params=None,
                  kernels_from: ServingEngine | None = None):
         assert policy in POLICIES, policy
         assert n_strict >= 1 and n_relaxed >= 1
         self.cfg = cfg
         self.policy = policy
+        # chunked-prefill token budget: "auto" = roofline-suggested per
+        # round (PerfModel.suggest_chunk_tokens), N = fixed budget,
+        # 0/None = legacy whole-prompt prefill with layer interruption
+        self.chunked = chunk_tokens not in (None, 0, "0")
+        self.chunk_budget = (None if chunk_tokens == "auto"
+                             else int(chunk_tokens) if self.chunked else 0)
         self.clock = clock or WallClock()
         self.slo_ttft = slo_ttft
         self.slo_tpot = slo_tpot
@@ -245,10 +257,136 @@ class PoolRuntime:
     # relaxed pool: prefill (layer-interruptible) + offline decode
     # ------------------------------------------------------------------
     def _relaxed_round(self, slot: EngineSlot, now: float) -> float:
+        if self.chunked:
+            # fused mixed round: the §3.4.1 boundary is the chunk, chosen
+            # here — deterministic under both clocks, no mid-layer polling
+            pf = self._pick_chunk_prefill(slot)
+            return self._decode_slot(slot, now, relaxed=True, prefill=pf)
         cost = self._prefill_one(slot, now)
         if slot.online or (self.policy == "ooco" and slot.offline):
             cost += self._decode_slot(slot, now + cost, relaxed=True)
         return cost
+
+    # ------------------------------------------------------------------
+    # chunk-granular prefill selection (token-budget scheduling)
+    # ------------------------------------------------------------------
+    def _pick_chunk_prefill(self, slot: EngineSlot):
+        """Choose the prefill request this slot advances this round. §3.4.1
+        fast preemption happens HERE, at a deterministic chunk boundary
+        under both clocks: under ``ooco`` a queued online request pauses an
+        in-progress offline prefill (the offline keeps its landed KV and
+        resumes later without re-running any layer); ``online_priority``
+        starts online work first but never pauses in-flight prefills
+        (legacy semantics: preemption is an ooco mechanism); ``base_pd``
+        keeps strict FIFO — its head-of-line blocking is the point of the
+        baseline. Returns ``(req, toks)`` or None."""
+        prog = slot.prefilling
+        prog[:] = [e for e in prog if not e[0].done
+                   and e[0].rid in slot.engine.requests]
+        if self.policy == "base_pd":
+            return prog[0] if prog else self._admit_prefill_fifo(slot)
+        cur_online = next((e for e in prog if e[0].kind == Kind.ONLINE), None)
+        if cur_online is not None:
+            return cur_online
+        if self.policy == "ooco" and self.online_queue:
+            entry = self._admit_online_prefill(slot)
+            if entry is not None:
+                if prog:
+                    self.metrics.chunk_preemptions += 1
+                prog.insert(0, entry)
+                return entry
+        if prog:
+            return prog[0]
+        if self.online_queue:
+            entry = self._admit_online_prefill(slot)
+            if entry is not None:
+                prog.append(entry)
+                return entry
+        entry = self._next_offline_for(slot)
+        if entry is not None:
+            req, toks, home = entry
+            if home is None:
+                slot.engine.add_request(req, toks)
+            prog.append((req, toks))
+            return (req, toks)
+        return None
+
+    def _admit_online_prefill(self, slot: EngineSlot):
+        """Pop + admit the online queue head (evicting offline residents for
+        space, as in the legacy path). None if it cannot fit."""
+        eng = slot.engine
+        req, toks = self.online_queue[0]
+        if not eng.cache.can_fit(len(toks)):
+            need = (eng.cache.pages_for(len(toks))
+                    - eng.cache.allocator.free_pages) * eng.cache.page_size
+            self._evict_from(slot, need)
+        if not eng.cache.can_fit(len(toks)):
+            return None
+        self.online_queue.pop(0)
+        eng.add_request(req, toks)
+        return (req, toks)
+
+    def _admit_prefill_fifo(self, slot: EngineSlot):
+        """base_pd admission: plain FIFO over both queues by arrival."""
+        if (self.offline_queue
+                and (not self.online_queue
+                     or self.offline_queue[0][0].arrival
+                     < self.online_queue[0][0].arrival)):
+            entry = self._next_offline_for(slot)
+            if entry is not None:
+                req, toks, home = entry
+                if home is None:
+                    slot.engine.add_request(req, toks)
+                slot.prefilling.append((req, toks))
+                return (req, toks)
+        if self.online_queue:
+            entry = self._admit_online_prefill(slot)
+            if entry is not None:
+                slot.prefilling.append(entry)
+                return entry
+        return None
+
+    def _plan_round(self, slot: EngineSlot, relaxed: bool,
+                    pf_req: Request | None) -> sch.MixedPlan:
+        """Token-budget plan for one round (decode batch + prefill chunk).
+        ooco routes decode through §3.4.4 mix-decoding inside the
+        scheduler; the baselines keep their legacy decode selection and the
+        budget only sizes the chunk."""
+        remaining = (pf_req.prompt_len - pf_req.prefill_tokens_done
+                     if pf_req is not None else 0)
+        if self.policy == "ooco":
+            slo = (None if relaxed
+                   else self._effective_slo(slot.online, slot.offline))
+            return sch.token_budget_schedule(
+                slot.online, slot.offline, pf_req, remaining, self.pm,
+                slo=slo, budget_tokens=self.chunk_budget or None,
+                relaxed_cap=self.relaxed_decode_cap,
+                mem_budget_bytes=None if relaxed else self._pool_kv_bytes(slot),
+                rng=self.rng)
+        decode = self._select_batch(slot, relaxed)
+        return sch.token_budget_schedule(
+            slot.online, slot.offline, pf_req, remaining, self.pm,
+            slo=None, budget_tokens=self.chunk_budget or None,
+            relaxed_cap=self.relaxed_decode_cap, decode_override=decode)
+
+    def _after_chunk(self, slot: EngineSlot, req: Request, now: float,
+                     step_lat: float) -> float:
+        """Post-chunk bookkeeping; returns any extra cost (placement)."""
+        self.metrics.chunks += 1
+        if req.prefill_tokens_done < req.prompt_len:
+            return 0.0                       # mid-prefill: stays pinned
+        slot.prefilling[:] = [e for e in slot.prefilling if e[0] is not req]
+        if req.first_token_time is None:
+            req.first_token_time = now + step_lat
+        eng = slot.engine
+        if req.done:
+            eng.cache.free(req.rid)
+            self._finish(req, eng, now + step_lat)
+            return 0.0
+        if self.policy == "ooco" and req.kind != Kind.ONLINE:
+            slot.offline.append(req)         # decode on relaxed until pulled
+            return 0.0
+        return self._place_on_strict(req, slot)
 
     def _prefill_cost(self, est_latency: float, layers_run: int,
                       measured: float) -> float:
@@ -454,6 +592,7 @@ class PoolRuntime:
             # tokens; the waste is tracked in recompute_tokens
             r.generated = 0
             r.prefill_layers_done = 0
+            r.prefill_tokens_done = 0
             self.offline_queue.append((r, toks, None))
             self.metrics.evictions += 1
 
@@ -469,7 +608,12 @@ class PoolRuntime:
         cost, batch = self._decode_slot(slot, now, relaxed=False,
                                         want_batch=True)
         if self.policy == "ooco" and batch:
-            cost += self._pull_migration(slot, batch)
+            pull = self._pull_migration(slot, batch)
+            # the pull's KV transfer rides the interconnect while the next
+            # round's compute occupies the chips, so the round is charged
+            # max(compute, transfer), not the sum (same overlap the
+            # simulator models; deterministic — both terms are modeled)
+            cost = max(cost, pull)
         return cost
 
     def _effective_slo(self, online, offline) -> float:
@@ -549,17 +693,40 @@ class PoolRuntime:
         return out
 
     def _decode_slot(self, slot: EngineSlot, now: float, *, relaxed: bool,
-                     want_batch: bool = False):
+                     want_batch: bool = False, prefill=None):
+        """One engine round: decode batch + (chunked mode) a fused prefill
+        chunk in the same dispatch. ``prefill`` is the ``(req, toks)`` entry
+        chosen by ``_pick_chunk_prefill``."""
         slot.online = [r for r in slot.online if not r.done]
         slot.offline = [r for r in slot.offline if not r.done]
         empty = ((0.0, []) if want_batch else 0.0)
-        if not slot.online and not slot.offline:
+        pf_req = prefill[0] if prefill is not None else None
+        if not slot.online and not slot.offline and pf_req is None:
             return empty
-        batch = self._select_batch(slot, relaxed)
-        batch = self._fit_batch(slot, batch)
-        if not batch:
+        if self.chunked:
+            plan = self._plan_round(slot, relaxed, pf_req)
+            batch = self._fit_batch(slot, plan.decode)
+            chunk = plan.chunk_tokens if plan.prefill is not None else 0
+            if chunk:
+                chunk = self._fit_chunk(slot, pf_req, chunk,
+                                        exclude={r.rid for r in batch})
+        else:
+            batch = self._fit_batch(slot, self._select_batch(slot, relaxed))
+            chunk = 0
+        if not batch and not chunk:
+            if (pf_req is not None and prefill in slot.prefilling
+                    and not slot.offline):
+                # full pool with nothing decodable and no chunk admissible:
+                # vLLM-style recompute preemption — drop the landed prefix
+                # so pinned prefills can never wedge the engine
+                self._abort_chunk_prefill(slot, prefill)
             return empty
-        est = self.pm.decode_estimate([r.context_len for r in batch])
+        dec_ctx = [r.context_len for r in batch]
+        if chunk:
+            est = self.pm.mixed_estimate(
+                chunk, pf_req.prefill_tokens_done + chunk, dec_ctx)
+        else:
+            est = self.pm.decode_estimate(dec_ctx)
         slot.last_bottleneck = est.bottleneck
         if not relaxed:
             online_lat = (self.pm.decode_estimate(
@@ -570,7 +737,10 @@ class PoolRuntime:
         virtual = self.clock.virtual
         before = [r.decode_time_sum for r in batch] if virtual else None
         t0 = time.perf_counter()
-        slot.engine.decode_step([r.rid for r in batch])
+        if chunk:
+            slot.engine.mixed_step([r.rid for r in batch], pf_req.rid, chunk)
+        else:
+            slot.engine.decode_step([r.rid for r in batch])
         dt = time.perf_counter() - t0
         step_lat = est.latency if virtual else dt
         if virtual:
@@ -583,7 +753,41 @@ class PoolRuntime:
         for r in batch:
             if r.done:
                 self._finish(r, slot.engine, now + step_lat)
-        return (step_lat, batch) if want_batch else step_lat
+        cost = step_lat
+        if chunk:
+            cost += self._after_chunk(slot, pf_req, now, step_lat)
+        return (cost, batch) if want_batch else cost
+
+    def _abort_chunk_prefill(self, slot: EngineSlot, entry) -> None:
+        """Discard a pinned chunk prefill's landed prefix and requeue the
+        request (recompute later, counted in ``recompute_tokens``)."""
+        req, toks = entry
+        slot.prefilling.remove(entry)
+        eng = slot.engine
+        eng.abort_prefill(req.rid)
+        eng.requests.pop(req.rid, None)
+        eng.token_buf.pop(req.rid, None)
+        if req.kind == Kind.ONLINE:
+            self.online_queue.insert(0, (req, toks))
+        else:
+            self.offline_queue.append((req, toks, None))
+
+    def _fit_chunk(self, slot: EngineSlot, req: Request, chunk: int,
+                   exclude: set[int]) -> int:
+        """Page-budget admission for the round's prefill chunk: shrink it to
+        the KV capacity left after the decode batch's reservations (online
+        prefills may evict offline residents first). A zero here just defers
+        the chunk — the landed prefix stays pinned and resumes later."""
+        cache = slot.engine.cache
+        done = req.prefill_tokens_done
+        slack = len(cache.tables.get(req.rid, [])) * cache.page_size - done
+        free_tok = cache.allocator.free_pages * cache.page_size + max(slack, 0)
+        if req.kind == Kind.ONLINE and chunk > free_tok:
+            self._evict_from(slot, chunk - free_tok,
+                             exclude=exclude | {req.rid})
+            free_tok = (cache.allocator.free_pages * cache.page_size
+                        + max(slack, 0))
+        return min(chunk, free_tok)
 
     def _pull_migration(self, slot: EngineSlot, batch: list[Request]) -> float:
         """§3.4.3 pull-model migration: a strict engine with SLO headroom
@@ -689,7 +893,10 @@ class PoolRuntime:
         viol = sum(1 for r in online
                    if r.violates(self.slo_ttft, self.slo_tpot, now=elapsed))
         off_tokens = int(sum(r.generated for r in offline))
-        preempt = sum(s.engine.stats.preemptions for s in self.relaxed_pool)
+        # §3.4.1 preemptions: layer-level interruptions (legacy path) plus
+        # chunk-boundary pauses of in-progress offline prefills
+        preempt = (sum(s.engine.stats.preemptions for s in self.relaxed_pool)
+                   + self.metrics.chunk_preemptions)
         return {
             "policy": self.policy,
             "n_strict": len(self.strict_pool),
@@ -710,6 +917,8 @@ class PoolRuntime:
             "recompute_tokens": int(sum(r.recompute_tokens
                                         for r in self.all_requests)),
             "preemptions": int(preempt),
+            "chunks": self.metrics.chunks,
+            "chunk_preemptions": self.metrics.chunk_preemptions,
             "migrations": self.metrics.migrations,
             "pulls": self.metrics.pulls,
             "evictions": self.metrics.evictions,

@@ -229,6 +229,117 @@ class PerfModel:
                                [max(s // 2, 1) for s in seq_lens], decode=False)
         return self._sum(ops, self.hw.O_p, kv_bytes=self.kv_bytes(seq_lens))
 
+    def mixed_estimate(self, chunk_tokens: int, chunk_ctx: int,
+                       decode_ctx: Sequence[int] = ()) -> StepEstimate:
+        """One **fused mixed step**: a prefill chunk of ``chunk_tokens``
+        (query positions ``[chunk_ctx - chunk_tokens, chunk_ctx)`` attending
+        to the ``chunk_ctx`` tokens landed so far) executed in the same
+        dispatch as a decode batch over ``decode_ctx``.
+
+        Ops run back-to-back on the same instance, so per-op latencies sum,
+        but the static dispatch overhead is paid **once** — the structural
+        win of fusing over the serialized prefill-then-decode rounds
+        (Sarathi-style chunked prefill, paper §3.4.1 boundary granularity).
+        """
+        chunk_tokens = int(chunk_tokens)
+        decode_ctx = np.asarray(list(decode_ctx), np.float64)
+        overhead = max(self.hw.O_p if chunk_tokens else 0.0,
+                       self.hw.O_d if decode_ctx.size else 0.0)
+        lat, fl, by, comp, mem, comm, kvb = overhead, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0
+        if chunk_tokens:
+            # chunk queries average Skv = ctx_before + chunk/2 keys (causal)
+            skv = max(int(chunk_ctx) - chunk_tokens // 2, 1)
+            ops = self._all_layers(chunk_tokens, [chunk_tokens], [skv],
+                                   decode=False)
+            p = self._sum(ops, 0.0, kv_bytes=0.0)
+            lat += p.latency
+            fl += p.flops
+            by += p.bytes
+            comp += p.compute_time
+            mem += p.memory_time
+            comm += p.comm_time
+            kvb += self.kv_bytes([chunk_ctx])
+        if decode_ctx.size:
+            d = self._fast_decode(decode_ctx)
+            lat += d.latency - self.hw.O_d
+            fl += d.flops
+            by += d.bytes
+            comp += d.compute_time
+            mem += d.memory_time
+            kvb += d.kv_bytes
+        work = lat - overhead
+        if work <= 0 or overhead > work:
+            bn = "overhead"
+        elif comp > 1.3 * mem:
+            bn = "compute"
+        elif mem > 1.3 * comp:
+            bn = "memory"
+        else:
+            bn = "balanced"
+        return StepEstimate(latency=lat, flops=fl, bytes=by, compute_time=comp,
+                            memory_time=mem, comm_time=comm, overhead=overhead,
+                            kv_bytes=kvb, bottleneck=bn)
+
+    def prefill_saturation_tokens(self, max_t: int = 8192) -> int:
+        """Roofline ridge point for prefill: the smallest token count whose
+        step is compute-bound (GEMM flops/F_g >= bytes/M_g) with the static
+        overhead an amortized minority (O_p <= 10% of step latency). Below
+        this, a prefill chunk wastes bandwidth/dispatch; above it, extra
+        chunk length only adds latency without improving utilization —
+        which is exactly the chunk-size sweet spot chunked-prefill
+        schedulers aim for. Memoized (schedulers call this every round)."""
+        cached = getattr(self, "_prefill_sat_cache", None)
+        if cached is not None and cached[0] == max_t:
+            return cached[1]
+
+        def saturated(T: int) -> bool:
+            ops = self._layer_ops(T, [T], [max(T // 2, 1)], decode=False)
+            gf = sum(o.flops for o in ops if o.kind == "gemm")
+            gb = sum(o.bytes for o in ops if o.kind == "gemm")
+            lat = self.prefill_estimate([T]).latency
+            return (gf / self.hw.F_g >= gb / self.hw.M_g
+                    and self.hw.O_p <= 0.1 * lat)
+
+        lo, hi = 1, max_t
+        if not saturated(hi):
+            self._prefill_sat_cache = (max_t, max_t)
+            return max_t
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if saturated(mid):
+                hi = mid
+            else:
+                lo = mid + 1
+        self._prefill_sat_cache = (max_t, lo)
+        return lo
+
+    def suggest_chunk_tokens(self, decode_ctx: Sequence[int] = (), *,
+                             slo: float | None = None, chunk_ctx: int = 0,
+                             bucket: int = 8, max_chunk: int = 4096) -> int:
+        """Pick the prefill-chunk token budget for a fused mixed step from
+        the roofline ridge: start at ``prefill_saturation_tokens`` (decode
+        rows share the GEMM, so their batch size is subtracted), round up to
+        a bucket multiple, then — if an SLO bounds this step (latency-strict
+        rounds) — shrink to the largest bucket multiple whose
+        ``mixed_estimate`` stays within it. Returns 0 when even one bucket
+        of prefill would break the SLO."""
+        decode_ctx = list(decode_ctx)
+        ridge = self.prefill_saturation_tokens(max_chunk)
+        budget = max(ridge - len(decode_ctx), bucket)
+        budget = min(-(-budget // bucket) * bucket, max_chunk)
+        if slo is None:
+            return budget
+        lo, hi, best = 1, budget // bucket, 0
+        while lo <= hi:
+            mid = (lo + hi) // 2
+            t = mid * bucket
+            if self.mixed_estimate(t, max(chunk_ctx, t),
+                                   decode_ctx).latency <= slo:
+                best, lo = t, mid + 1
+            else:
+                hi = mid - 1
+        return best
+
     def decode_estimate(self, context_lens: Sequence[int],
                         detail: bool = False) -> StepEstimate:
         """One decode step for a batch whose requests have the given context

@@ -36,6 +36,7 @@ class Request:
     phase: Phase = Phase.QUEUED
     generated: int = 0
     prefill_layers_done: int = 0     # layer-level interruption progress
+    prefill_tokens_done: int = 0     # chunked-prefill progress (tokens landed)
     location: str | None = None      # instance id currently holding state
     prefill_end: float | None = None
     first_token_time: float | None = None

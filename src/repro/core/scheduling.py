@@ -86,6 +86,104 @@ def mix_decoding_selection(
 
 
 # ---------------------------------------------------------------------------
+# Token-budget scheduling for fused mixed prefill/decode rounds
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MixedPlan:
+    """One engine round under the token-budget scheduler: the decode batch
+    plus (optionally) a prefill chunk fused into the same dispatch."""
+    decode: list[Request]
+    prefill: Request | None = None
+    chunk_tokens: int = 0      # prompt tokens of `prefill` to run this round
+
+    @property
+    def total_tokens(self) -> int:
+        return len(self.decode) + self.chunk_tokens
+
+
+def token_budget_schedule(
+    online: Sequence[Request],
+    offline: Sequence[Request],
+    prefill: Request | None,
+    prefill_remaining: int,
+    pm: PerfModel,
+    *,
+    slo: float | None = None,
+    budget_tokens: int | None = None,
+    relaxed_cap: int | None = None,
+    mem_budget_bytes: float | None = None,
+    rng: random.Random | None = None,
+    bucket: int = 8,
+    decode_override: list[Request] | None = None,
+) -> MixedPlan:
+    """Sarathi-style token-budget plan replacing the prefill-then-decode
+    serialization: decode tokens ride first (one token each — they carry the
+    latency SLO), and the leftover roofline budget becomes the prefill
+    chunk, so every fused round sits near the compute/memory ridge instead
+    of alternating between a memory-bound decode step and an
+    over-long compute-bound prefill.
+
+    ``slo`` set (latency-strict rounds): the decode batch comes from
+    §3.4.4 mix-decoding selection and the chunk shrinks until the
+    perf-model-predicted fused-step latency stays within the SLO (possibly
+    to zero — decode SLO always wins). ``slo`` None (latency-relaxed
+    rounds): decode is capped by ``relaxed_cap`` and the chunk floor is one
+    bucket, so a resident decode batch can never starve prefill progress.
+    ``budget_tokens`` overrides the roofline suggestion (``--chunk-tokens
+    N``); ``decode_override`` lets a caller keep its own decode-batch
+    policy (the runtime's baselines) while the budget sizes the chunk."""
+    if decode_override is not None:
+        decode = list(decode_override)
+    elif slo is not None:
+        decode = mix_decoding_selection(
+            online, offline, slo, pm, rng=rng,
+            mem_budget_bytes=mem_budget_bytes)
+    else:
+        decode = list(online) + list(offline)[:relaxed_cap]
+    if prefill is None or prefill_remaining <= 0:
+        return MixedPlan(decode)
+    dec_ctx = [r.context_len for r in decode]
+    netted = budget_tokens is None
+    if netted:
+        # roofline ridge budget, already net of the decode batch's GEMM
+        # share (the SLO cap is applied once, exactly, below)
+        budget_tokens = pm.suggest_chunk_tokens(dec_ctx, bucket=bucket)
+    if slo is not None:
+        # latency-bound round: decode tokens spend the same budget (they
+        # share the step's GEMMs), so the chunk gets the leftover
+        chunk = max(budget_tokens if netted else budget_tokens - len(decode),
+                    0)
+    elif prefill.kind is Kind.ONLINE:
+        # the chunk budget bounds how much OFFLINE prefill work can delay
+        # latency-critical work per round (§3.4.1); an online prefill IS
+        # the latency-critical work — chunking it only defers its own TTFT
+        chunk = prefill_remaining
+    else:
+        # latency-relaxed round: the budget is a roofline floor, not a
+        # latency cap — shrinking the chunk below it for resident decodes
+        # only multiplies rounds (and their static overheads)
+        chunk = max(budget_tokens, bucket)
+    chunk = min(chunk, prefill_remaining)
+    if slo is not None and chunk > 0:
+        # largest bucket-multiple chunk whose fused step meets the SLO
+        lo, hi, best = 1, -(-chunk // bucket), 0
+        while lo <= hi:
+            mid = (lo + hi) // 2
+            t = min(mid * bucket, chunk)
+            est = pm.mixed_estimate(
+                t, prefill.prefill_tokens_done + t, dec_ctx)
+            if est.latency <= slo:
+                best, lo = t, mid + 1
+            else:
+                hi = mid - 1
+        chunk = best
+    if chunk <= 0:
+        return MixedPlan(decode)
+    return MixedPlan(decode, prefill, int(chunk))
+
+
+# ---------------------------------------------------------------------------
 # §3.4.3  Offline Request Migration (Algorithm 1)
 # ---------------------------------------------------------------------------
 

@@ -4,11 +4,25 @@ One ``ServingEngine`` is an xllm-instance analogue (DESIGN §3): it holds the
 model weights once and can run Prefill and/or Decode iterations. The paper's
 two mechanisms are implemented for real, not simulated:
 
-* **Layer-level interruption** (§3.4.1): prefill executes as a sequence of
-  per-layer jitted calls carrying the hidden state; between layers the engine
-  polls a preemption callback. An interrupted prefill keeps (hidden, layer
-  index, KV-so-far) and resumes exactly where it stopped — tests assert
-  bit-compatible logits vs an uninterrupted run.
+* **Chunked prefill + fused mixed steps** (§3.4.1 boundary granularity):
+  ``mixed_step(decode_rids, prefill_rid, chunk_tokens)`` advances a prompt by
+  a token-budgeted chunk INSIDE the same jitted dispatch that decodes the
+  resident batch. The chunk's K/V scatters into the donated paged pools
+  first, then the (length-bucketed) query block attends over the request's
+  gathered pages — everything already landed plus itself — with causal
+  ``q_offset``/per-row ``kv_lens`` masking, so one trace serves every
+  (chunk length, context) bucket. Between chunks the only state is the
+  count of landed tokens (``ChunkedPrefill``): pausing costs nothing and a
+  resume re-runs no layer. Decode-side attention keeps the backend paged
+  kernel dispatch; the chunk side uses the XLA flash path on every backend
+  (the Pallas prefill kernel's offsets are compile-time — see ROADMAP).
+* **Layer-level interruption** (§3.4.1, legacy path): whole-prompt
+  ``prefill()`` executes as a sequence of per-layer jitted calls carrying
+  the hidden state; between layers the engine polls a preemption callback.
+  An interrupted prefill keeps (hidden, layer index, KV-so-far) and resumes
+  exactly where it stopped — tests assert bit-compatible logits vs an
+  uninterrupted run. Prompts are padded to power-of-two buckets (masked via
+  ``kv_lens``) so arbitrary lengths stop retracing the layer functions.
 * **Mix decoding selection** (§3.4.4): each decode iteration builds its batch
   with ``core.scheduling.mix_decoding_selection`` under the TPOT SLO using
   the roofline perf model.
@@ -150,12 +164,25 @@ class PartialPrefill:
 
 
 @dataclass
+class ChunkedPrefill:
+    """State of a chunk-granular prefill: ``done`` prompt tokens have run
+    through EVERY layer and their KV is landed in the paged pool, so a
+    resume costs nothing but the next chunk — no layer re-execution
+    (contrast ``PartialPrefill``, which holds a mid-stack hidden state)."""
+    rid: int
+    tokens: np.ndarray        # full prompt token ids
+    done: int = 0             # tokens landed (all layers, KV in the pool)
+
+
+@dataclass
 class EngineStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
     preemptions: int = 0
     evictions: int = 0
     decode_steps: int = 0
+    prefill_chunks: int = 0   # chunk-granular prefill dispatches
+    mixed_steps: int = 0      # fused prefill-chunk + decode dispatches
     prefill_seconds: float = 0.0
     decode_seconds: float = 0.0
 
@@ -181,7 +208,12 @@ class ServingEngine:
         self.requests: dict[int, Request] = {}
         self.token_buf: dict[int, TokenRing] = {}   # prompt + generated tokens
         self.partial: dict[int, PartialPrefill] = {}
+        self.chunk_state: dict[int, ChunkedPrefill] = {}
         self.req_sampling: dict[int, tuple[float, int]] = {}
+        # Length bucketing (padding + per-row kv_lens masking) needs dynamic
+        # key masks: the XLA flash path honors them; the Pallas kernel's
+        # kv_len is compile-time, so those backends keep exact shapes.
+        self._prefill_bucketed = impl_for_backend(self.backend) == "xla"
         self.stats = EngineStats()
         if kernels_from is not None:
             # Pool runtimes run N+M engines over the SAME weights; the jitted
@@ -198,6 +230,7 @@ class ServingEngine:
             self._logits_fn = src._logits_fn
             self._sample_fn = src._sample_fn
             self._decode_fns = src._decode_fns
+            self._mixed_fns = src._mixed_fns
             self._layer_params_cached = src._layer_params_cached
         else:
             self._layer_fn = self._build_layer_fn()
@@ -205,6 +238,7 @@ class ServingEngine:
             self._logits_fn = jax.jit(lambda p, x: model._logits(p, x))
             self._sample_fn = jax.jit(sample_tokens)
             self._decode_fns: dict[tuple[int, int], Callable] = {}
+            self._mixed_fns: dict[tuple, Callable] = {}
             # per-layer params sliced once (not jax.tree.map per layer per prefill)
             self._layer_params_cached = [
                 jax.tree.map(lambda a, i=i: a[i], params["layers"])
@@ -234,16 +268,23 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # layer-interruptible prefill
     # ------------------------------------------------------------------
+    @staticmethod
+    def pad_chunk(n: int) -> int:
+        """Bucket a prefill prompt/chunk length to the next power of two
+        (min 8) — bounds the jit trace count over arbitrary lengths the way
+        ``pad_pages`` bounds the decode-table variants."""
+        return max(8, 1 << (max(n, 1) - 1).bit_length())
+
     def _build_layer_fn(self):
         cfg = self.cfg
         impl = impl_for_backend(self.backend)
 
         @jax.jit
-        def layer_fn(lp, x, positions):
+        def layer_fn(lp, x, positions, kv_lens):
             h = _norm(cfg, lp["ln1"], x)
             a, (k, v) = attention.attn_prefill(
                 lp["attn"], h, positions, cfg, window=cfg.sliding_window,
-                impl=impl)
+                kv_lens=kv_lens, impl=impl)
             if cfg.use_post_norm:
                 a = _norm(cfg, lp["post_ln1"], a)
             x = x + a
@@ -286,16 +327,25 @@ class ServingEngine:
         else:
             tokens = np.asarray(self.token_buf[rid][: req.prompt_len], np.int32)
             self.cache.ensure(rid, req.prompt_len)
-            x = self._embed_fn(self.params, jnp.asarray(tokens)[None])
+            padded = tokens
+            if self._prefill_bucketed:
+                # pad to a bucket length; the padded keys are masked out by
+                # kv_lens below, so one trace serves every length in the
+                # bucket instead of retracing per unique prompt length
+                padded = np.zeros(self.pad_chunk(tokens.shape[0]), np.int32)
+                padded[: tokens.shape[0]] = tokens
+            x = self._embed_fn(self.params, jnp.asarray(padded)[None])
             start_layer = 0
         S = tokens.shape[0]
-        positions = jnp.arange(S)[None]
+        positions = jnp.arange(x.shape[1])[None]
+        kv_lens = jnp.asarray([S], jnp.int32)
         req.phase = Phase.PREFILLING
         ks, vs = [], []   # per-layer KV buffered; flushed once per segment
         for li in range(start_layer, cfg.num_layers):
-            x, k, v = self._layer_fn(self._layer_params(li), x, positions)
-            ks.append(k[0])
-            vs.append(v[0])
+            x, k, v = self._layer_fn(self._layer_params(li), x, positions,
+                                     kv_lens)
+            ks.append(k[0, :S])
+            vs.append(v[0, :S])
             req.prefill_layers_done = li + 1
             if should_preempt is not None and li < cfg.num_layers - 1 and should_preempt():
                 self._flush_prefill_kv(rid, start_layer, ks, vs)
@@ -304,8 +354,8 @@ class ServingEngine:
                 self.stats.prefill_seconds += time.perf_counter() - t0
                 return "preempted"
         self._flush_prefill_kv(rid, start_layer, ks, vs)
-        # first token from the last hidden state, sampled on device
-        logits = self._logits_fn(self.params, x[:, -1])
+        # first token from the last REAL hidden state, sampled on device
+        logits = self._logits_fn(self.params, x[:, S - 1])
         temps, topks = self._sampling_arrays([rid], 1)
         if temps[0] > 0:
             key, step = self._next_key()
@@ -321,12 +371,20 @@ class ServingEngine:
         return "done"
 
     def abort_prefill(self, rid: int) -> None:
-        """Discard partial prefill (offline request pushed back to queue)."""
-        self.partial.pop(rid, None)
+        """Discard partial prefill state — layer-granular (whole prompt is
+        re-run later, the pessimistic legacy accounting) or chunk-granular
+        (only the tokens actually landed count as recompute waste)."""
+        part = self.partial.pop(rid, None)
+        state = self.chunk_state.pop(rid, None)
         self.cache.free(rid)
         req = self.requests[rid]
-        req.recompute_tokens += req.prompt_len
+        if state is not None:
+            req.recompute_tokens += state.done
+        elif part is not None:
+            req.recompute_tokens += req.prompt_len
+        # neither: nothing was computed yet -> nothing wasted
         req.prefill_layers_done = 0
+        req.prefill_tokens_done = 0
         req.phase = Phase.QUEUED
 
     # ------------------------------------------------------------------
@@ -437,8 +495,9 @@ class ServingEngine:
             out.update(self._decode_chunk(rids[i: i + max_bucket]))
         return out
 
-    def _decode_chunk(self, rids: list[int]) -> dict[int, int]:
-        t0 = time.perf_counter()
+    def _decode_args(self, rids: list[int]):
+        """Build the padded device args of a decode batch (shared by the
+        plain decode step and the fused mixed step)."""
         B = len(rids)
         bucket = self._bucket(B)
         for r in rids:
@@ -452,25 +511,17 @@ class ServingEngine:
         tokens = np.array([self.token_buf[r][int(pos)] for r, pos in zip(rids, positions)],
                           np.int32)
         lengths = positions + 1
-        temps, topks = self._sampling_arrays(rids, bucket)
         pad = bucket - B
         if pad:
             tables = np.pad(tables, ((0, pad), (0, 0)))
             positions = np.pad(positions, (0, pad))
             tokens = np.pad(tokens, (0, pad))
             lengths = np.pad(lengths, (0, pad), constant_values=1)
-        sampled = (self.sampling.temperature > 0
-                   or any(r in self.req_sampling for r in rids))
-        fn = self._decode_fn(bucket, pages, sampled)
-        key, sample_step = self._next_key()
-        nxt_dev, self.cache.k_pool, self.cache.v_pool = fn(
-            self.params, jnp.asarray(tokens), jnp.asarray(positions),
-            jnp.asarray(tables), jnp.asarray(lengths),
-            self.cache.k_pool, self.cache.v_pool,
-            key, sample_step, jnp.asarray(temps), jnp.asarray(topks))
-        nxt = np.asarray(nxt_dev)   # (bucket,) ids — the only device->host sync
+        return bucket, pages, tokens, positions, tables, lengths
+
+    def _decode_finish(self, rids: list[int], nxt: np.ndarray, dt: float) -> dict[int, int]:
+        """Per-request bookkeeping after a decode (or fused) dispatch."""
         out = {}
-        dt = time.perf_counter() - t0
         for i, r in enumerate(rids):
             req = self.requests[r]
             tok = int(nxt[i])
@@ -482,9 +533,260 @@ class ServingEngine:
                 req.phase = Phase.FINISHED
                 self.cache.free(r)
                 self.req_sampling.pop(r, None)
-        self.stats.decode_tokens += B
+        self.stats.decode_tokens += len(rids)
         self.stats.decode_steps += 1
         self.stats.decode_seconds += dt
+        return out
+
+    def _decode_chunk(self, rids: list[int]) -> dict[int, int]:
+        t0 = time.perf_counter()
+        bucket, pages, tokens, positions, tables, lengths = self._decode_args(rids)
+        temps, topks = self._sampling_arrays(rids, bucket)
+        sampled = (self.sampling.temperature > 0
+                   or any(r in self.req_sampling for r in rids))
+        fn = self._decode_fn(bucket, pages, sampled)
+        key, sample_step = self._next_key()
+        nxt_dev, self.cache.k_pool, self.cache.v_pool = fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(tables), jnp.asarray(lengths),
+            self.cache.k_pool, self.cache.v_pool,
+            key, sample_step, jnp.asarray(temps), jnp.asarray(topks))
+        nxt = np.asarray(nxt_dev)   # (bucket,) ids — the only device->host sync
+        return self._decode_finish(rids, nxt, time.perf_counter() - t0)
+
+    # ------------------------------------------------------------------
+    # fused mixed prefill/decode step (chunked prefill)
+    # ------------------------------------------------------------------
+    def _mixed_fn(self, dec_bucket: int, dec_pages: int, chunk_bucket: int,
+                  chunk_pages: int, sampled: bool = False):
+        """Jitted fused step: one dispatch advances a token-budgeted prefill
+        chunk AND decodes the resident batch, both writing the same donated
+        KV pools. ``dec_bucket == 0`` specializes to a chunk-only step.
+
+        The chunk is a length-bucketed query block at positions
+        ``[start, start + c_len)``; its K/V is scattered into the paged pool
+        first, then the chunk attends over the request's (gathered) pages —
+        i.e. over everything already landed plus itself — with causal
+        ``q_offset`` masking and a per-row ``kv_lens`` bound, so one trace
+        serves every (chunk length, context) in the bucket."""
+        fkey = (dec_bucket, dec_pages, chunk_bucket, chunk_pages, sampled)
+        if fkey in self._mixed_fns:
+            return self._mixed_fns[fkey]
+        cfg = self.cfg
+        model = self.model
+        page_size = self.cache.page_size
+        use_ref, interpret = backend_flags(self.backend)
+        with_decode = dec_bucket > 0
+        hd = cfg.head_dim_
+
+        @functools.partial(jax.jit, donate_argnums=(8, 9))
+        def step(params, d_tokens, d_positions, d_tables, d_lengths,
+                 c_tokens, c_meta, c_tables, k_pool, v_pool,
+                 key, sample_step, temps, top_ks):
+            # c_meta (2,) int32 = [start (tokens already landed), c_len]
+            c_start, c_len = c_meta[0], c_meta[1]
+            xc = model._embed(params, c_tokens[None])            # (1, C, d)
+            c_pos = c_start + jnp.arange(chunk_bucket, dtype=jnp.int32)
+            in_chunk = jnp.arange(chunk_bucket) < c_len
+            # padded chunk rows scatter into the reserved trash page 0
+            # (exactly like padded decode rows) so they can never collide
+            # with a real slot of the request's table
+            c_page = jnp.where(
+                in_chunk,
+                c_tables[jnp.minimum(c_pos // page_size, chunk_pages - 1)],
+                0)
+            c_off = c_pos % page_size
+            c_kv_len = (c_start + c_len)[None]                   # (1,)
+            if with_decode:
+                xd = model._embed(params, d_tokens[:, None])
+                d_page = jnp.take_along_axis(
+                    d_tables, (d_positions // page_size)[:, None], axis=1)[:, 0]
+                d_off = d_positions % page_size
+            else:
+                xd = jnp.zeros((), jnp.float32)  # carry placeholder
+
+            def body(carry, inp):
+                xd, xc, kpool, vpool = carry
+                lp, li = inp
+                # ---- KV writes land before either side's gather ----
+                if with_decode:
+                    hdn = _norm(cfg, lp["ln1"], xd)
+                    k_new, v_new = attention.project_kv_for_cache(
+                        lp["attn"], hdn, d_positions, cfg)
+                    kpool = kpool.at[li, d_page, d_off].set(
+                        k_new[:, 0].astype(cfg.jnp_dtype).astype(kpool.dtype))
+                    vpool = vpool.at[li, d_page, d_off].set(
+                        v_new[:, 0].astype(cfg.jnp_dtype).astype(vpool.dtype))
+                hc = _norm(cfg, lp["ln1"], xc)
+                qc, kc, vc = attention._project_qkv(
+                    lp["attn"], hc, cfg, c_pos[None],
+                    rope=not cfg.is_encoder_decoder)
+                kpool = kpool.at[li, c_page, c_off].set(
+                    kc[0].astype(cfg.jnp_dtype).astype(kpool.dtype))
+                vpool = vpool.at[li, c_page, c_off].set(
+                    vc[0].astype(cfg.jnp_dtype).astype(vpool.dtype))
+                # ---- decode attention: backend paged kernel ----
+                if with_decode:
+                    q = layers.dense(lp["attn"]["wq"], hdn[:, 0]).reshape(
+                        -1, cfg.num_heads, hd)
+                    if cfg.qk_norm:
+                        q = layers.rmsnorm(lp["attn"]["q_norm"], q, cfg.norm_eps)
+                    q = layers.apply_rope(q[:, None], d_positions[:, None],
+                                          cfg.rope_theta)[:, 0]
+                    B, P = d_tables.shape
+                    page = kpool.shape[2]
+                    comp_k = kpool[li, d_tables].reshape(B * P, page, *kpool.shape[3:])
+                    comp_v = vpool[li, d_tables].reshape(B * P, page, *vpool.shape[3:])
+                    local = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P)
+                    a = paged_attention(q, comp_k, comp_v, local, d_lengths,
+                                        num_kv_heads=cfg.num_kv_heads,
+                                        logit_softcap=cfg.attn_logit_softcap,
+                                        use_ref=use_ref, interpret=interpret)
+                    a = layers.dense(lp["attn"]["wo"], a.reshape(a.shape[0], 1, -1))
+                    if cfg.use_post_norm:
+                        a = _norm(cfg, lp["post_ln1"], a)
+                    xd = xd + a
+                    h2 = _norm(cfg, lp["ln2"], xd)
+                    if cfg.is_moe:
+                        m, _ = moe_lib.moe_mlp(lp["moe"], h2, cfg, groups=1)
+                    else:
+                        m = layers.mlp(lp["mlp"], h2, cfg.mlp_act)
+                    if cfg.use_post_norm:
+                        m = _norm(cfg, lp["post_ln2"], m)
+                    xd = xd + m
+                # ---- chunk attention over the request's landed pages ----
+                ck = kpool[li, c_tables].reshape(
+                    1, chunk_pages * page_size, *kpool.shape[3:])
+                cv = vpool[li, c_tables].reshape(
+                    1, chunk_pages * page_size, *vpool.shape[3:])
+                ac = attention.flash_attention_xla(
+                    qc, ck, cv, causal=True, q_offset=c_start,
+                    kv_lens=c_kv_len, logit_softcap=cfg.attn_logit_softcap)
+                ac = layers.dense(lp["attn"]["wo"],
+                                  ac.reshape(1, chunk_bucket, -1))
+                if cfg.use_post_norm:
+                    ac = _norm(cfg, lp["post_ln1"], ac)
+                xc = xc + ac
+                hc2 = _norm(cfg, lp["ln2"], xc)
+                if cfg.is_moe:
+                    mc, _ = moe_lib.moe_mlp(lp["moe"], hc2, cfg, groups=1)
+                else:
+                    mc = layers.mlp(lp["mlp"], hc2, cfg.mlp_act)
+                if cfg.use_post_norm:
+                    mc = _norm(cfg, lp["post_ln2"], mc)
+                return (xd, xc + mc, kpool, vpool), None
+
+            (xd, xc, k_pool, v_pool), _ = jax.lax.scan(
+                body, (xd, xc, k_pool, v_pool),
+                (params["layers"], jnp.arange(cfg.num_layers)))
+            # chunk next-token logits from the last REAL chunk position —
+            # only meaningful (and only consumed) on the final chunk
+            xlast = jax.lax.dynamic_slice_in_dim(
+                xc, jnp.maximum(c_len - 1, 0), 1, axis=1)[:, 0]
+            logits_c = model._logits(params, xlast)              # (1, V)
+            if with_decode:
+                logits = jnp.concatenate(
+                    [model._logits(params, xd[:, 0]), logits_c], axis=0)
+            else:
+                logits = logits_c
+            if sampled:
+                nxt = sample_tokens(logits, jax.random.fold_in(key, sample_step),
+                                    temps, top_ks)
+            else:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, k_pool, v_pool
+
+        self._mixed_fns[fkey] = step
+        return step
+
+    def mixed_step(self, decode_rids: list[int], prefill_rid: int | None = None,
+                   chunk_tokens: int = 0) -> dict[int, int]:
+        """One co-located iteration: decode ``decode_rids`` while advancing
+        ``prefill_rid``'s chunk-granular prefill by up to ``chunk_tokens``
+        prompt tokens, fused into a single dispatch when both sides are
+        present. Either side may be empty (falls back to plain decode /
+        chunk-only prefill). Returns rid -> new token for the decode rids;
+        chunk progress is visible via ``prefill_progress`` and the request's
+        phase flip to DECODING once the prompt completes."""
+        if prefill_rid is None or chunk_tokens <= 0:
+            return self.decode_step(decode_rids)
+        max_bucket = self.decode_buckets[-1]
+        first = decode_rids[:max_bucket]
+        out = self._mixed_dispatch(first, prefill_rid, chunk_tokens)
+        for i in range(max_bucket, len(decode_rids), max_bucket):
+            out.update(self._decode_chunk(decode_rids[i: i + max_bucket]))
+        return out
+
+    def prefill_progress(self, rid: int) -> int:
+        """Prompt tokens landed so far by the chunked path (0 if none)."""
+        state = self.chunk_state.get(rid)
+        return state.done if state is not None else 0
+
+    def _mixed_dispatch(self, rids: list[int], prid: int,
+                        chunk_tokens: int) -> dict[int, int]:
+        t0 = time.perf_counter()
+        req = self.requests[prid]
+        state = self.chunk_state.get(prid)
+        if state is None:
+            assert prid not in self.partial, \
+                "request already mid layer-granular prefill"
+            state = self.chunk_state[prid] = ChunkedPrefill(
+                prid, np.asarray(self.token_buf[prid][: req.prompt_len],
+                                 np.int32))
+        c = min(int(chunk_tokens), req.prompt_len - state.done)
+        assert c >= 1, "prefill already complete"
+        req.phase = Phase.PREFILLING
+        # pages are claimed chunk-by-chunk, so a preempted prefill only ever
+        # holds capacity for what it has actually landed
+        self.cache.ensure(prid, state.done + c)
+        C = self.pad_chunk(c)
+        c_tok = np.zeros(C, np.int32)
+        c_tok[:c] = state.tokens[state.done: state.done + c]
+        table = self.cache.tables[prid]
+        cp = self.pad_pages(len(table))
+        c_tables = np.zeros(cp, np.int32)
+        c_tables[: len(table)] = table
+        c_meta = np.array([state.done, c], np.int32)
+        if rids:
+            bucket, pages, tokens, positions, tables, lengths = \
+                self._decode_args(rids)
+        else:
+            bucket, pages = 0, 0
+            tokens = positions = lengths = np.zeros(0, np.int32)
+            tables = np.zeros((0, 0), np.int32)
+        temps, topks = self._sampling_arrays(rids, bucket + 1)
+        d = (self.sampling.temperature, self.sampling.top_k)
+        temps[bucket], topks[bucket] = self.req_sampling.get(prid, d)
+        sampled = (self.sampling.temperature > 0
+                   or any(r in self.req_sampling for r in [*rids, prid]))
+        fn = self._mixed_fn(bucket, pages, C, cp, sampled)
+        key, sample_step = self._next_key()
+        nxt_dev, self.cache.k_pool, self.cache.v_pool = fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(tables), jnp.asarray(lengths),
+            jnp.asarray(c_tok), jnp.asarray(c_meta), jnp.asarray(c_tables),
+            self.cache.k_pool, self.cache.v_pool,
+            key, sample_step, jnp.asarray(temps), jnp.asarray(topks))
+        nxt = np.asarray(nxt_dev)   # (bucket + 1,) — single host sync
+        dt = time.perf_counter() - t0
+        out = self._decode_finish(rids, nxt, dt) if rids else {}
+        state.done += c
+        req.prefill_tokens_done = state.done
+        self.stats.prefill_chunks += 1
+        if rids:
+            self.stats.mixed_steps += 1
+        else:
+            self.stats.prefill_seconds += dt
+        if state.done >= req.prompt_len:
+            self.token_buf[prid].append(int(nxt[-1]))
+            req.generated = 1
+            req.phase = Phase.DECODING
+            self.stats.prefill_tokens += req.prompt_len
+            del self.chunk_state[prid]
+            if req.done:   # one-output request: finished at prefill
+                req.phase = Phase.FINISHED
+                self.cache.free(prid)
+                self.req_sampling.pop(prid, None)
         return out
 
     # ------------------------------------------------------------------

@@ -24,7 +24,9 @@ from repro.data import traces as tr
 
 class CoLocatedServer(PoolRuntime):
     """PR-1 compatibility wrapper: the fixed 1-relaxed + 1-strict topology
-    as a special case of the pool runtime (same ``submit``/``step`` API)."""
+    as a special case of the pool runtime (same ``submit``/``step`` API).
+    Keeps the legacy whole-prompt prefill with layer-level interruption
+    (``chunk_tokens=0``) — the PR-1 semantics its tests pin down."""
 
     def __init__(self, cfg, *, policy: str = "ooco", slo_tpot: float = 1.0,
                  num_pages: int = 1024, page_size: int = 16, seed: int = 0,
@@ -32,7 +34,8 @@ class CoLocatedServer(PoolRuntime):
         super().__init__(cfg, policy=policy, n_strict=1, n_relaxed=1,
                          clock=WallClock(), slo_tpot=slo_tpot,
                          num_pages=num_pages, page_size=page_size, seed=seed,
-                         backend=backend, decode_buckets=(8,))
+                         backend=backend, decode_buckets=(8,),
+                         chunk_tokens=0)
 
     @property
     def relaxed(self):
@@ -67,6 +70,12 @@ def main(argv=None):
     ap.add_argument("--virtual-clock", action="store_true",
                     help="deterministic trace replay: time advances by the "
                          "perf model instead of the wall clock")
+    ap.add_argument("--chunk-tokens", default="auto",
+                    help="chunked-prefill token budget per fused mixed "
+                         "step: 'auto' picks it from the roofline ridge "
+                         "(PerfModel.suggest_chunk_tokens), N fixes it, "
+                         "0 disables chunking (legacy whole-prompt prefill "
+                         "with layer-level interruption)")
     ap.add_argument("--duration", type=float, default=20.0)
     ap.add_argument("--online-qps", type=float, default=0.5)
     ap.add_argument("--offline-qps", type=float, default=1.0)
@@ -83,11 +92,13 @@ def main(argv=None):
     cfg = get_config(args.arch).reduced()
     clock = VirtualClock() if args.virtual_clock else WallClock()
     hw = replay_hw() if args.virtual_clock else None
+    chunk = args.chunk_tokens if args.chunk_tokens == "auto" \
+        else int(args.chunk_tokens)
     runtime = PoolRuntime(cfg, policy=args.policy, n_strict=args.strict,
                           n_relaxed=args.relaxed, clock=clock,
                           slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot,
                           num_pages=args.num_pages, seed=args.seed,
-                          backend=args.backend, hw=hw)
+                          backend=args.backend, hw=hw, chunk_tokens=chunk)
     online, offline = build_traces(args, cfg)
     summary = runtime.run(online, offline, duration=args.duration,
                           max_prompt=args.max_prompt,

@@ -37,19 +37,21 @@ def built():
 
 def _replay(built, policy, *, seed=0, n_strict=1, n_relaxed=2,
             n_offline=100, offline_qps=20.0, online_qps=1.2, duration=10.0,
-            max_output=12, drain=False):
+            max_output=12, drain=False, chunk_tokens="auto"):
     """Deterministic virtual-clock replay of a bursty synthetic trace.
 
     Defaults use a fixed evaluation window under a saturating offline
     backlog (the §5.2 protocol): every policy gets the same window, so
     offline tokens/s measures what the policy extracted at its SLO
-    attainment."""
+    attainment. Chunked prefill is on by default (the production path);
+    ``chunk_tokens=0`` replays through the legacy whole-prompt prefill."""
     cfg, model, params, donor = built
     rt = PoolRuntime(cfg, policy=policy, n_strict=n_strict,
                      n_relaxed=n_relaxed, clock=VirtualClock(), backend="ref",
                      num_pages=256, page_size=8, slo_ttft=SLO_TTFT,
                      slo_tpot=SLO_TPOT, hw=replay_hw(), seed=seed,
-                     model=model, params=params, kernels_from=donor[0])
+                     model=model, params=params, chunk_tokens=chunk_tokens,
+                     kernels_from=donor[0])
     donor[0] = donor[0] or rt.kernel_donor
     online = tr.online_trace("ooc", duration=duration, mean_qps=online_qps,
                              seed=seed)
@@ -125,6 +127,60 @@ class TestPolicyDiscrimination:
         m = rt.run(online, offline, duration=2.0, max_prompt=48, max_output=4)
         assert m["preemptions"] >= 1
         assert m["online_finished"] == 1 and m["offline_finished"] == 1
+
+
+class TestChunkedPrefill:
+    """Chunked prefill + fused mixed steps through the pool runtime:
+    §3.4.1 preemption at deterministic chunk boundaries under the virtual
+    clock, bit-identical replay with chunking on, and the TTFT payoff vs
+    whole-prompt prefill on a bursty trace."""
+
+    def test_chunked_replay_bit_deterministic(self, built):
+        m1, rt1 = _replay(built, "ooco", chunk_tokens=8)
+        m2, rt2 = _replay(built, "ooco", chunk_tokens=8)
+        assert m1 == m2
+        assert rt1.finished_signature() == rt2.finished_signature()
+        assert m1["chunks"] > 0                 # the fused path actually ran
+
+    def test_chunk_boundary_preemption_fires(self, built):
+        """An online arrival landing inside a long offline prefill pauses it
+        at the next chunk boundary — deterministically, with the offline
+        request keeping its landed prefix (no layer re-execution: zero
+        recompute tokens)."""
+        cfg, model, params, donor = built
+        rt = PoolRuntime(cfg, policy="ooco", n_strict=1, n_relaxed=1,
+                         clock=VirtualClock(), backend="ref", num_pages=128,
+                         page_size=8, slo_ttft=SLO_TTFT, slo_tpot=SLO_TPOT,
+                         hw=replay_hw(), seed=0, model=model, params=params,
+                         chunk_tokens=8, kernels_from=donor[0])
+        offline = [tr.TraceRequest(0.0, 48, 4)]
+        online = [tr.TraceRequest(0.005, 16, 4)]   # mid-prefill arrival
+        m = rt.run(online, offline, duration=2.0, max_prompt=48, max_output=4)
+        assert m["chunk_preemptions"] >= 1
+        assert m["preemptions"] >= 1               # unified §3.4.1 counter
+        assert m["online_finished"] == 1 and m["offline_finished"] == 1
+        assert m["recompute_tokens"] == 0          # paused, never re-run
+
+    def test_chunked_ttft_beats_whole_prompt_prefill(self, built):
+        """On the bursty co-location trace, chunk-boundary preemption must
+        tighten online TTFT vs the legacy whole-prompt path at no offline
+        throughput cost (the ISSUE's headline tradeoff)."""
+        chunked, _ = _replay(built, "ooco", chunk_tokens="auto")
+        legacy, _ = _replay(built, "ooco", chunk_tokens=0)
+        assert chunked["online_ttft_p99"] < legacy["online_ttft_p99"]
+        assert chunked["online_ttft_p50"] < legacy["online_ttft_p50"]
+        assert (chunked["offline_tokens_per_s"]
+                >= legacy["offline_tokens_per_s"] * (1 - 1e-9))
+        assert chunked["online_slo_attainment"] >= legacy["online_slo_attainment"]
+
+    def test_fixed_budget_cli_value_drains(self, built):
+        """A fixed --chunk-tokens N budget (not auto) still drains a mixed
+        trace with every request finished."""
+        m, rt = _replay(built, "ooco", chunk_tokens=16, n_offline=16,
+                        offline_qps=50.0, duration=6.0, drain=True)
+        assert m["offline_finished"] == m["offline_requests"]
+        assert m["online_finished"] == m["online_requests"]
+        assert m["chunks"] > 0
 
 
 class TestTopology:

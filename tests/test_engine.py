@@ -128,6 +128,119 @@ class TestEngine:
         eng2.add_request(r2, generated)
         assert eng2.prefill(r2.rid) == "done"
 
+    def test_chunked_prefill_matches_reference(self, setup):
+        """Landing the prompt through token-budgeted chunks (including odd,
+        non-bucket sizes) must generate the same tokens as whole-prompt
+        prefill + decode."""
+        cfg, model, params = setup
+        prompt = list(np.random.RandomState(5).randint(0, cfg.vocab_size, 21))
+        ref = _ref_generate(model, params, prompt, 6)
+        for chunk in (5, 8, 16, 21):
+            eng = ServingEngine(model, params, num_pages=64, page_size=8)
+            r = Request(Kind.OFFLINE, 0.0, len(prompt), 6)
+            eng.add_request(r, prompt)
+            while r.generated == 0:
+                eng.mixed_step([], r.rid, chunk)
+            assert r.prefill_tokens_done == len(prompt)
+            assert eng.stats.prefill_chunks == -(-len(prompt) // chunk)
+            while not r.done:
+                eng.decode_step([r.rid])
+            assert eng.token_buf[r.rid] == ref, f"chunk={chunk}"
+
+    def test_fused_mixed_step_matches_reference(self, setup):
+        """One fused dispatch = decode batch + prefill chunk: both the
+        co-decoded residents and the chunked request must match their
+        whole-prompt references exactly."""
+        cfg, model, params = setup
+        rng = np.random.RandomState(6)
+        pa = list(rng.randint(0, cfg.vocab_size, 17))
+        pb = list(rng.randint(0, cfg.vocab_size, 19))
+        ref_a = _ref_generate(model, params, pa, 8)
+        ref_b = _ref_generate(model, params, pb, 4)
+        eng = ServingEngine(model, params, num_pages=64, page_size=8)
+        ra = Request(Kind.OFFLINE, 0.0, len(pa), 8)
+        eng.add_request(ra, pa)
+        eng.prefill(ra.rid)
+        rb = Request(Kind.OFFLINE, 0.0, len(pb), 4)
+        eng.add_request(rb, pb)
+        while rb.generated == 0:
+            eng.mixed_step([ra.rid], rb.rid, 7)
+        assert eng.stats.mixed_steps == 3    # ceil(19 / 7)
+        while not (ra.done and rb.done):
+            eng.decode_step([r.rid for r in (ra, rb) if not r.done])
+        assert eng.token_buf[ra.rid] == ref_a
+        assert eng.token_buf[rb.rid] == ref_b
+
+    def test_abort_mid_chunk_prefill_no_kv_corruption(self, setup):
+        """Aborting a chunk-granular prefill frees its pages and counts only
+        the landed tokens as recompute waste; a resident request decoding
+        across the abort (whose pages may be recycled) stays token-exact,
+        and the aborted request restarts cleanly."""
+        cfg, model, params = setup
+        rng = np.random.RandomState(7)
+        pa = list(rng.randint(0, cfg.vocab_size, 13))
+        pb = list(rng.randint(0, cfg.vocab_size, 24))
+        ref_a = _ref_generate(model, params, pa, 10)
+        ref_b = _ref_generate(model, params, pb, 3)
+        eng = ServingEngine(model, params, num_pages=32, page_size=8)
+        ra = Request(Kind.OFFLINE, 0.0, len(pa), 10)
+        eng.add_request(ra, pa)
+        eng.prefill(ra.rid)
+        free0 = eng.cache.allocator.free_pages
+        rb = Request(Kind.OFFLINE, 0.0, len(pb), 3)
+        eng.add_request(rb, pb)
+        eng.mixed_step([ra.rid], rb.rid, 8)     # 8 of 24 tokens landed
+        assert rb.prefill_tokens_done == 8
+        eng.abort_prefill(rb.rid)
+        assert eng.cache.allocator.free_pages == free0
+        assert rb.recompute_tokens == 8         # only the landed chunk
+        assert rb.phase == Phase.QUEUED and rb.prefill_tokens_done == 0
+        # resume from scratch (fresh pages, possibly the recycled ones)
+        while rb.generated == 0:
+            eng.mixed_step([ra.rid], rb.rid, 8)
+        while not (ra.done and rb.done):
+            eng.decode_step([r.rid for r in (ra, rb) if not r.done])
+        assert eng.token_buf[ra.rid] == ref_a   # co-decoded, never corrupted
+        assert eng.token_buf[rb.rid] == ref_b
+
+    def test_prefill_trace_count_stable(self, setup):
+        """Length bucketing: arbitrary prompt lengths must reuse a small set
+        of jit traces (one per bucket), not retrace per unique length —
+        for the whole-prompt path AND the chunked/fused path."""
+        cfg, model, params = setup
+        eng = ServingEngine(model, params, num_pages=256, page_size=8,
+                            decode_buckets=(4,))
+        rng = np.random.RandomState(8)
+        lengths = list(range(9, 33))            # 24 distinct lengths
+        for n in lengths:
+            p = list(rng.randint(0, cfg.vocab_size, n))
+            r = Request(Kind.OFFLINE, 0.0, n, 1)
+            eng.add_request(r, p)
+            eng.prefill(r.rid)
+        buckets = {ServingEngine.pad_chunk(n) for n in lengths}
+        assert eng._layer_fn._cache_size() <= len(buckets)  # {16, 32} -> 2
+        # chunked path: odd chunk lengths share bucketed mixed-fn traces
+        mixed_before = len(eng._mixed_fns)
+        for i, chunk in enumerate((5, 6, 7, 8)):
+            p = list(rng.randint(0, cfg.vocab_size, 8))
+            r = Request(Kind.OFFLINE, 0.0, 8, 1)
+            eng.add_request(r, p)
+            eng.mixed_step([], r.rid, chunk)
+        assert len(eng._mixed_fns) == mixed_before + 1  # one (8-token) trace
+
+    def test_chunked_pages_allocated_incrementally(self, setup):
+        """Chunk-granular prefill claims pages as chunks land, so a paused
+        prefill only holds capacity for its landed prefix."""
+        cfg, model, params = setup
+        eng = ServingEngine(model, params, num_pages=64, page_size=8)
+        free0 = eng.cache.allocator.free_pages
+        r = Request(Kind.OFFLINE, 0.0, 40, 2)
+        eng.add_request(r, list(range(40)))
+        eng.mixed_step([], r.rid, 8)
+        assert eng.cache.allocator.free_pages == free0 - 1   # 8 of 40 tokens
+        eng.mixed_step([], r.rid, 8)
+        assert eng.cache.allocator.free_pages == free0 - 2
+
     def test_migration_roundtrip(self, setup):
         """migrate_out -> migrate_in preserves generation exactly."""
         cfg, model, params = setup

@@ -121,3 +121,65 @@ def test_all_archs_estimate(arch):
     assert d.latency > 0 and np.isfinite(d.latency)
     assert p.latency > 0 and np.isfinite(p.latency)
     assert d.flops > 0 and p.flops > d.flops / 8  # prefill >> decode per req
+
+
+# ---------------------------------------------------------------------------
+# mixed-batch (fused prefill chunk + decode) estimates + chunk budgets
+# ---------------------------------------------------------------------------
+
+class TestMixedEstimate:
+    def test_single_overhead_and_additive_work(self):
+        """A fused step pays ONE static overhead; its work is the sum of the
+        prefill-chunk and decode parts."""
+        pm = PerfModel(get_config("qwen2.5-7b"), TPU_V5E, tp=4)
+        dec = [512] * 16
+        m = pm.mixed_estimate(256, 256, dec)
+        p = pm.mixed_estimate(256, 256, [])
+        d = pm.decode_estimate(dec)
+        assert m.overhead == max(pm.hw.O_p, pm.hw.O_d)
+        assert m.latency == pytest.approx(
+            (p.latency - p.overhead) + (d.latency - d.overhead) + m.overhead,
+            rel=1e-9)
+        # fusing saves exactly the second dispatch's static overhead
+        assert p.latency + d.latency - m.latency == pytest.approx(
+            min(pm.hw.O_p, pm.hw.O_d), rel=1e-9)
+
+    def test_degenerate_forms(self):
+        pm = PerfModel(get_config("qwen2.5-7b"), TPU_V5E, tp=4)
+        d = pm.mixed_estimate(0, 0, [100] * 4)
+        assert d.latency == pytest.approx(pm.decode_estimate([100] * 4).latency)
+        p = pm.mixed_estimate(128, 128, [])
+        assert p.overhead == pm.hw.O_p and p.latency > pm.hw.O_p
+
+    def test_chunk_attention_grows_with_landed_context(self):
+        """The same chunk later in the prompt attends to more landed KV."""
+        pm = PerfModel(get_config("qwen2.5-7b"), TPU_V5E, tp=4)
+        early = pm.mixed_estimate(256, 256, [])
+        late = pm.mixed_estimate(256, 4096, [])
+        assert late.latency > early.latency
+
+
+class TestSuggestChunkTokens:
+    def test_ridge_point_properties(self):
+        pm = PerfModel(get_config("qwen2.5-7b"), TPU_V5E, tp=4)
+        sat = pm.prefill_saturation_tokens()
+        assert 1 <= sat <= 8192
+        t = pm.suggest_chunk_tokens()
+        assert t >= 8 and t % 8 == 0
+        # a resident decode batch shrinks the leftover budget, never below
+        # one bucket
+        assert pm.suggest_chunk_tokens([512] * 64) <= max(t, 8)
+
+    def test_slo_cap_enforced(self):
+        pm = PerfModel(get_config("qwen2.5-7b"), TPU_V5E, tp=4)
+        dec = [1024] * 8
+        for slo in (0.005, 0.02, 0.1):
+            t = pm.suggest_chunk_tokens(dec, slo=slo)
+            assert t >= 0
+            if t:
+                est = pm.mixed_estimate(t, max(t, 1), dec)
+                assert est.latency <= slo * (1 + 1e-9)
+
+    def test_tight_slo_returns_zero(self):
+        pm = PerfModel(get_config("qwen2.5-7b"), TPU_V5E, tp=4)
+        assert pm.suggest_chunk_tokens([4096] * 8, slo=1e-7) == 0

@@ -160,3 +160,68 @@ class TestGating:
             if flipped:
                 assert not r
             flipped = flipped or (not r)
+
+
+class TestTokenBudgetSchedule:
+    def _pf(self, prompt=2048, done=0, kind=Kind.OFFLINE):
+        r = Request(kind, 0.0, prompt, 10)
+        r.prefill_tokens_done = done
+        return r
+
+    def test_no_prefill_is_pure_decode(self):
+        online = _reqs(Kind.ONLINE, [100] * 4)
+        plan = sch.token_budget_schedule(online, [], None, 0, PM, slo=SLO)
+        assert plan.prefill is None and plan.chunk_tokens == 0
+        assert plan.decode[: len(online)] == online
+
+    def test_slo_bounds_fused_step(self):
+        """Any scheduled chunk keeps the predicted fused-step latency within
+        the SLO; online decodes always ride."""
+        online = _reqs(Kind.ONLINE, [2000] * 6)
+        pf = self._pf()
+        plan = sch.token_budget_schedule(online, [], pf, pf.prompt_len, PM,
+                                         slo=SLO)
+        assert plan.decode[: len(online)] == online
+        if plan.chunk_tokens:
+            est = PM.mixed_estimate(
+                plan.chunk_tokens, plan.chunk_tokens,
+                [r.context_len for r in plan.decode])
+            assert est.latency <= SLO * (1 + 1e-9)
+
+    def test_tight_slo_defers_chunk_never_decode(self):
+        online = _reqs(Kind.ONLINE, [4000] * 8)
+        pf = self._pf()
+        plan = sch.token_budget_schedule(online, [], pf, pf.prompt_len, PM,
+                                         slo=1e-7)
+        assert plan.decode[: len(online)] == online
+        assert plan.prefill is None and plan.chunk_tokens == 0
+
+    def test_relaxed_round_floors_chunk_at_bucket(self):
+        """A resident decode batch can never starve prefill progress on a
+        latency-relaxed round."""
+        offline = _reqs(Kind.OFFLINE, [3000] * 30)
+        pf = self._pf()
+        plan = sch.token_budget_schedule([], offline, pf, pf.prompt_len, PM,
+                                         slo=None, relaxed_cap=16,
+                                         budget_tokens=8)
+        assert len(plan.decode) == 16
+        assert plan.chunk_tokens >= 8
+
+    def test_online_prefill_runs_whole_on_relaxed(self):
+        """Chunking exists to pause OFFLINE prefill; an online prompt on a
+        relaxed round lands whole (chunking it only defers its own TTFT)."""
+        pf = self._pf(prompt=1536, done=512, kind=Kind.ONLINE)
+        plan = sch.token_budget_schedule([], [], pf, 1024, PM, slo=None,
+                                         budget_tokens=128)
+        assert plan.chunk_tokens == 1024
+        off = self._pf(prompt=1536, done=512)
+        plan = sch.token_budget_schedule([], [], off, 1024, PM, slo=None,
+                                         budget_tokens=128)
+        assert plan.chunk_tokens == 128
+
+    def test_chunk_never_exceeds_remaining(self):
+        pf = self._pf(prompt=100, done=90)
+        plan = sch.token_budget_schedule([], [], pf, 10, PM, slo=None,
+                                         budget_tokens=4096)
+        assert plan.chunk_tokens == 10
+        assert plan.total_tokens == 10
