@@ -108,6 +108,7 @@ def run_runtime_policy_comparison(*, arch="qwen2.5-7b", duration=10.0,
                                   online_qps=1.2, n_offline=100,
                                   offline_qps=20.0, n_strict=1, n_relaxed=2,
                                   slo_ttft=1.0, slo_tpot=0.030, seed=0,
+                                  chunk_tokens="auto", decode_horizon="auto",
                                   quick=False, verbose=True):
     """Replay one bursty trace per policy through the REAL pool runtime
     under the virtual clock. Deterministic: the same seed reproduces the
@@ -139,7 +140,8 @@ def run_runtime_policy_comparison(*, arch="qwen2.5-7b", duration=10.0,
                          backend="ref", num_pages=256, page_size=8,
                          slo_ttft=slo_ttft, slo_tpot=slo_tpot,
                          hw=replay_hw(), seed=seed, model=model,
-                         params=params, kernels_from=donor)
+                         params=params, chunk_tokens=chunk_tokens,
+                         decode_horizon=decode_horizon, kernels_from=donor)
         donor = donor or rt.kernel_donor
         t0 = time.perf_counter()
         m = rt.run(online, offline, duration=duration, max_prompt=48,
@@ -157,6 +159,8 @@ def run_runtime_policy_comparison(*, arch="qwen2.5-7b", duration=10.0,
         "topology": f"{n_strict}-strict+{n_relaxed}-relaxed",
         "slo_ttft": slo_ttft,
         "slo_tpot": slo_tpot,
+        "chunk_tokens": chunk_tokens,
+        "decode_horizon": decode_horizon,
         "duration": duration,
         "policies": out,
         "ooco_vs_online_priority_offline_tput": round(
@@ -174,7 +178,11 @@ def write_bench_json(result, path="BENCH_colocation.json"):
             "virtual clock (real JAX engines, perf-model time — "
             "deterministic), with chunked prefill enabled (fused mixed "
             "steps, roofline-guided auto token budgets, §3.4.1 preemption "
-            "at chunk boundaries). Acceptance: ooco offline tokens/s > "
+            "at chunk boundaries) and multi-step decode horizons on "
+            "(roofline-chosen K on chunkless latency-relaxed rounds, one "
+            "dispatch overhead charged per horizon; push-migration KV "
+            "transfers overlap the source round's compute). Acceptance: "
+            "ooco offline tokens/s > "
             "online_priority at equal-or-better online SLO attainment; "
             "base_pd violates the TPOT SLO. Reproduce: PYTHONPATH=src "
             "python benchmarks/bench_colocation.py [--quick]."),

@@ -1,15 +1,26 @@
-"""Decode hot-path microbenchmark: steps/s, host overhead, donation proof.
+"""Decode hot-path microbenchmark: steps/s, host overhead, donation proof,
+multi-step decode-horizon amortization.
 
-Validates the zero-copy decode hot path three ways:
+Validates the zero-copy decode hot path four ways:
 
 * **steps/s, tokens/s** — full ``decode_step`` iterations at a fixed batch.
 * **host overhead per step** — wall time of ``decode_step`` minus wall time
   of the raw jitted step with pre-built arguments: the cost of the engine's
-  Python bookkeeping (table building, token rings, stats) per iteration.
-* **buffer inspection** — lowers the jitted decode step and the prefill
-  scatter and asserts, from the StableHLO/optimized-HLO text, that
-  ``k_pool``/``v_pool`` are donated (``tf.aliasing_output``) and that no
-  full-pool-shaped ``copy`` instruction survives on either path.
+  Python bookkeeping (table building, token rings, stats) per iteration,
+  i.e. the time between one step's device->host sync and the next dispatch.
+  Reported both absolute and as a **fraction of the dispatch** — the
+  quantity multi-step horizons amortize.
+* **buffer inspection** — lowers the jitted decode step, the prefill
+  scatter, and the K-step horizon scan and asserts, from the
+  StableHLO/optimized-HLO text, that ``k_pool``/``v_pool`` are donated
+  (``tf.aliasing_output``) and that no full-pool-shaped ``copy``
+  instruction survives on any path.
+* **horizon amortization** (``run_horizon_amortization``) — tokens/s of
+  ``decode_horizon`` at K in {1, 4, 16} on a small latency-bound batch
+  (identical decode math; K=1 is today's one-sync-per-token behavior),
+  plus the roofline-suggested K (``PerfModel.suggest_decode_horizon`` fed
+  the measured per-dispatch overhead). The K=16-vs-K=1 ratio is the
+  regression gate recorded in ``BENCH_engine.json``.
 
 Usage: PYTHONPATH=src python -m benchmarks.run --only decode_hotpath [--quick]
 """
@@ -50,6 +61,18 @@ def lower_prefill_scatter(eng: ServingEngine, *, n_layers: int | None = None,
     return kv_cache._scatter_layers.lower(
         eng.cache.k_pool, eng.cache.v_pool, jnp.zeros((n,), jnp.int32),
         idx, idx, kv, kv)
+
+
+def lower_horizon_step(eng: ServingEngine, *, bucket: int = 8, pages: int = 8,
+                       steps: int = 4):
+    """Lower the jitted K-step horizon scan for shape-only inspection."""
+    fn = eng._horizon_fn(bucket, pages, steps)
+    zi = jnp.zeros((bucket,), jnp.int32)
+    return fn.lower(
+        eng.params, zi, zi, jnp.zeros((bucket, pages), jnp.int32),
+        eng.cache.k_pool, eng.cache.v_pool, jnp.ones((bucket,), jnp.int32),
+        jax.random.PRNGKey(0), jnp.int32(1),
+        jnp.zeros((bucket,), jnp.float32), jnp.zeros((bucket,), jnp.int32))
 
 
 def donation_report(lowered, pool_shape) -> dict:
@@ -121,6 +144,9 @@ def run_decode_hotpath(arch="qwen2.5-7b", batch=8, prompt_len=64, steps=30,
         "steps_per_s": 1.0 / full_dt,
         "tokens_per_s": batch / full_dt,
         "host_overhead_ms_per_step": max(full_dt - raw_dt, 0.0) * 1e3,
+        # fraction of each dispatch spent host-side between the sync and
+        # the next dispatch — what a K-step horizon divides by K
+        "host_overhead_fraction": max(full_dt - raw_dt, 0.0) / full_dt,
         "decode_donated_args": dec["donated_args"],
         "decode_full_pool_copies": dec["full_pool_copies"],
         "prefill_donated_args": pre["donated_args"],
@@ -130,8 +156,117 @@ def run_decode_hotpath(arch="qwen2.5-7b", batch=8, prompt_len=64, steps=30,
         print(f"  decode hot path ({eng.backend}, B={batch}): "
               f"{out['steps_per_s']:.1f} steps/s, "
               f"{out['tokens_per_s']:.0f} tok/s, "
-              f"host overhead {out['host_overhead_ms_per_step']:.2f} ms/step")
+              f"host overhead {out['host_overhead_ms_per_step']:.2f} ms/step "
+              f"({out['host_overhead_fraction']:.1%} of dispatch)")
         print(f"  donation: decode {dec['donated_args']} aliased args / "
               f"{dec['full_pool_copies']} full-pool copies; prefill scatter "
               f"{pre['donated_args']} aliased / {pre['full_pool_copies']} copies")
+    return out
+
+
+def run_horizon_amortization(arch="qwen2.5-7b", batch=2, prompt_len=32,
+                             ks=(1, 4, 16), total_steps=64, backend="auto",
+                             seed=0, verbose=True):
+    """Multi-step decode-horizon amortization on a small latency-bound
+    batch: tokens/s at each K (identical per-step math — K=1 runs today's
+    ``decode_step`` loop with one host sync per token, K>1 runs
+    ``decode_horizon`` with one sync per K tokens), the measured
+    per-dispatch host overhead, the roofline-suggested K, and the donation
+    proof of the horizon scan from the lowered HLO."""
+    from repro.core.hardware import cpu_measured
+    from repro.core.perf_model import PerfModel
+
+    assert 1 in ks, "amortization is measured against K=1 (today's behavior)"
+    cfg = get_config(arch).reduced(layers=4, d_model=512, vocab=4096, d_ff=1536)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(seed))
+    eng = ServingEngine(model, params, num_pages=2048, page_size=16,
+                        decode_buckets=(batch,), backend=backend)
+    rng = np.random.RandomState(seed)
+    tok_per_s: dict[int, float] = {}
+    for K in ks:
+        # fresh residents per K so every variant decodes from the same
+        # context state (free the previous set's pages first)
+        for rid in list(eng.requests):
+            eng.cache.free(rid)
+        eng.requests.clear()
+        eng.token_buf.clear()
+        rids = []
+        for _ in range(batch):
+            prompt = list(rng.randint(0, cfg.vocab_size, prompt_len))
+            r = Request(Kind.OFFLINE, 0.0, prompt_len, 10 ** 6)
+            eng.add_request(r, prompt)
+            eng.prefill(r.rid)
+            rids.append(r.rid)
+        # warm/compile the variant, advancing EVERY variant by the same
+        # max(ks) steps so the timed windows cover identical context ranges
+        n = 0
+        while n < max(ks):
+            if K == 1:
+                eng.decode_step(rids)
+                n += 1
+            else:
+                eng.decode_horizon(rids, K)
+                n += K
+        n = 0
+        t0 = time.perf_counter()
+        while n < total_steps:
+            if K == 1:
+                eng.decode_step(rids)
+                n += 1
+            else:
+                eng.decode_horizon(rids, K)
+                n += K
+        dt = time.perf_counter() - t0
+        tok_per_s[K] = batch * n / dt
+    base = run_decode_hotpath(arch=arch, batch=batch, prompt_len=prompt_len,
+                              steps=max(total_steps // 4, 8), backend=backend,
+                              seed=seed, verbose=False)
+    # implied per-dispatch overhead from the K-scaling itself: modeling a
+    # step as work + overhead/K, the K=1 vs K=max pair solves for the full
+    # dispatch cost (arg build + jit call + device->host sync) — the
+    # raw-loop measurement in run_decode_hotpath only sees the Python
+    # bookkeeping slice of it, since the raw loop still dispatches per step
+    lo, hi = min(ks), max(ks)
+    t_lo, t_hi = batch / tok_per_s[lo], batch / tok_per_s[hi]
+    implied_ov = max((t_lo - t_hi) / (1.0 / lo - 1.0 / hi), 0.0)
+    work = max(t_lo - implied_ov / lo, 1e-9)
+    pm = PerfModel(cfg, cpu_measured())
+    ctx = [prompt_len + total_steps // 2] * batch
+    suggested = pm.suggest_decode_horizon(
+        ctx, dispatch_overhead=max(implied_ov,
+                                   base["host_overhead_ms_per_step"] * 1e-3),
+        max_horizon=max(ks))
+    chosen = min(ks, key=lambda k: abs(k - suggested))  # nearest measured K
+    hz = donation_report(lower_horizon_step(eng, bucket=batch,
+                                            pages=eng.pad_pages(
+                                                eng.cache.pages_for(
+                                                    prompt_len + total_steps)),
+                                            steps=4),
+                         eng.cache.k_pool.shape)
+    out = {
+        "backend": eng.backend,
+        "batch": batch,
+        "tokens_per_s_by_k": {str(k): tok_per_s[k] for k in ks},
+        "bookkeeping_ms_per_dispatch": base["host_overhead_ms_per_step"],
+        "implied_dispatch_overhead_ms": implied_ov * 1e3,
+        "dispatch_overhead_fraction": implied_ov / (implied_ov + work),
+        "suggested_k": suggested,
+        "chosen_k": chosen,
+        "chosen_speedup": tok_per_s[chosen] / tok_per_s[1],
+        "k16_speedup": (tok_per_s[16] / tok_per_s[1]
+                        if 16 in tok_per_s else None),
+        "horizon_donated_args": hz["donated_args"],
+        "horizon_full_pool_copies": hz["full_pool_copies"],
+    }
+    if verbose:
+        by_k = " ".join(f"K={k}:{v:.1f}" for k, v in tok_per_s.items())
+        k16 = (f" (K=16: {out['k16_speedup']:.2f}x)"
+               if out["k16_speedup"] is not None else "")
+        print(f"  decode horizon ({eng.backend}, B={batch}): {by_k} tok/s; "
+              f"dispatch overhead {out['implied_dispatch_overhead_ms']:.1f} ms "
+              f"({out['dispatch_overhead_fraction']:.0%} of a K=1 step); "
+              f"suggested K={suggested} -> {out['chosen_speedup']:.2f}x vs K=1"
+              f"{k16}; horizon donation "
+              f"{hz['donated_args']} aliased / {hz['full_pool_copies']} copies")
     return out

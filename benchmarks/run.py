@@ -33,6 +33,19 @@ def engine_throughput_floor(fraction: float = 0.25) -> float:
     return fraction * rec["trajectory"][-1]["cpu_tokens_per_s"]
 
 
+def horizon_speedup_floor(fraction: float = 0.25) -> float:
+    """Multi-step regression floor: the K=16 horizon must keep at least
+    ``fraction`` of the recorded K=16-vs-K=1 speedup margin (noise-tolerant,
+    but losing the fused dispatch entirely — speedup -> 1.0x — fails)."""
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
+    with open(path) as f:
+        rec = json.load(f)
+    recorded = next(r["decode_horizon"]["k16_speedup"]
+                    for r in reversed(rec["trajectory"])
+                    if "decode_horizon" in r)
+    return 1.0 + fraction * (recorded - 1.0)
+
+
 def bench_traces(quick=False):
     from benchmarks.bench_traces import run_scaling_invariance, run_traces
     t0 = time.perf_counter()
@@ -99,17 +112,38 @@ def bench_engine_throughput(quick=False, gate=False):
          f"pool_copies={m['mixed_full_pool_copies']}")
 
 
-def bench_decode_hotpath(quick=False):
-    """Zero-copy decode hot path: steps/s, host overhead, donation proof."""
-    from benchmarks.bench_decode_hotpath import run_decode_hotpath
+def bench_decode_hotpath(quick=False, gate=False):
+    """Zero-copy decode hot path: steps/s, host overhead, donation proof,
+    multi-step decode-horizon amortization (gated on the recorded K=16
+    speedup and on the horizon scan's pool donation)."""
+    from benchmarks.bench_decode_hotpath import (run_decode_hotpath,
+                                                 run_horizon_amortization)
     t0 = time.perf_counter()
     r = run_decode_hotpath(steps=10 if quick else 30, verbose=not quick)
     _row("decode_hotpath", (time.perf_counter() - t0) * 1e6,
          f"steps_per_s={r['steps_per_s']:.1f} "
          f"host_overhead_ms={r['host_overhead_ms_per_step']:.2f} "
+         f"({r['host_overhead_fraction']:.0%}) "
          f"donated={r['decode_donated_args']} "
          f"pool_copies={r['decode_full_pool_copies']}"
          f"+{r['prefill_full_pool_copies']} backend={r['backend']}")
+    t0 = time.perf_counter()
+    h = run_horizon_amortization(total_steps=32 if quick else 64,
+                                 verbose=not quick)
+    floor = horizon_speedup_floor() if gate else 0.0
+    err = ""
+    if gate:
+        if h["k16_speedup"] < floor:
+            err = f"ERROR horizon speedup below floor {floor:.2f}x: "
+        elif (h["horizon_donated_args"] < 2
+              or h["horizon_full_pool_copies"] > 0):
+            err = "ERROR horizon scan lost pool donation: "
+    ks = " ".join(f"k{k}={v:.0f}" for k, v in h["tokens_per_s_by_k"].items())
+    _row("decode_horizon", (time.perf_counter() - t0) * 1e6,
+         err + f"{ks} tok/s suggested_k={h['suggested_k']} "
+         f"k16_speedup={h['k16_speedup']:.2f}x "
+         f"donated={h['horizon_donated_args']} "
+         f"pool_copies={h['horizon_full_pool_copies']}")
 
 
 def bench_colocation(quick=False):
@@ -205,7 +239,8 @@ def main() -> int:
     for name, fn in BENCHES.items():
         if args.only and args.only != name:
             continue
-        kw = {"gate": args.gate} if name == "engine_throughput" else {}
+        kw = ({"gate": args.gate}
+              if name in ("engine_throughput", "decode_hotpath") else {})
         try:
             fn(quick=args.quick, **kw)
         except Exception as e:  # keep the harness running

@@ -152,6 +152,7 @@ class Metrics:
     evictions: int = 0
     chunks: int = 0                # prefill chunks executed (fused rounds)
     chunk_preemptions: int = 0     # §3.4.1 pauses at chunk boundaries
+    horizon_rounds: int = 0        # rounds dispatched as K>1 decode horizons
 
 
 def _pct(xs: list[float], q: float) -> float | None:
@@ -170,6 +171,8 @@ class PoolRuntime:
                  relaxed_decode_cap: int = 16,
                  gating_horizon: float = 20.0,
                  chunk_tokens: int | str | None = "auto",
+                 decode_horizon: int | str | None = 1,
+                 max_horizon: int = 16,
                  model=None, params=None,
                  kernels_from: ServingEngine | None = None):
         assert policy in POLICIES, policy
@@ -182,6 +185,15 @@ class PoolRuntime:
         self.chunked = chunk_tokens not in (None, 0, "0")
         self.chunk_budget = (None if chunk_tokens == "auto"
                              else int(chunk_tokens) if self.chunked else 0)
+        # multi-step decode horizons: "auto" = roofline-chosen K per round
+        # (PerfModel.suggest_decode_horizon under the §3.4.1 preemption
+        # bound), N = fixed K, 1/0/None = today's one-sync-per-token decode
+        # (which CoLocatedServer pins). Strict rounds and any round with a
+        # queued/resident online request always clamp to K=1.
+        self.horizon_req = ("auto" if decode_horizon == "auto"
+                           else max(int(decode_horizon), 1)
+                           if decode_horizon not in (None, 0, "0") else 1)
+        self.max_horizon = max_horizon
         self.clock = clock or WallClock()
         self.slo_ttft = slo_ttft
         self.slo_tpot = slo_tpot
@@ -224,6 +236,7 @@ class PoolRuntime:
         self.metrics = Metrics()
         self.measured_tpot = slo_tpot / 4
         self._op_cap: int | None = None
+        self._push_cost = 0.0   # per-round push-migration transfer (overlap)
         # wall-mode live-arrival probe for §3.4.1 (run() wires the trace feed)
         self.incoming_online = lambda: False
         self._next_online_arrival = lambda: None
@@ -257,15 +270,21 @@ class PoolRuntime:
     # relaxed pool: prefill (layer-interruptible) + offline decode
     # ------------------------------------------------------------------
     def _relaxed_round(self, slot: EngineSlot, now: float) -> float:
+        self._push_cost = 0.0
         if self.chunked:
             # fused mixed round: the §3.4.1 boundary is the chunk, chosen
             # here — deterministic under both clocks, no mid-layer polling
             pf = self._pick_chunk_prefill(slot)
-            return self._decode_slot(slot, now, relaxed=True, prefill=pf)
-        cost = self._prefill_one(slot, now)
-        if slot.online or (self.policy == "ooco" and slot.offline):
-            cost += self._decode_slot(slot, now + cost, relaxed=True)
-        return cost
+            cost = self._decode_slot(slot, now, relaxed=True, prefill=pf)
+        else:
+            cost = self._prefill_one(slot, now)
+            if slot.online or (self.policy == "ooco" and slot.offline):
+                cost += self._decode_slot(slot, now + cost, relaxed=True)
+        # push-migration KV transfers ride the interconnect while this
+        # round's compute occupies the chips, so the round is charged
+        # max(compute, transfer), not the sum — the same overlap the
+        # §3.4.3 pull path models (deterministic: both terms are modeled)
+        return max(cost, self._push_cost)
 
     # ------------------------------------------------------------------
     # chunk-granular prefill selection (token-budget scheduling)
@@ -354,6 +373,7 @@ class PoolRuntime:
         budget only sizes the chunk."""
         remaining = (pf_req.prompt_len - pf_req.prefill_tokens_done
                      if pf_req is not None else 0)
+        horizon = self._horizon_allowance(relaxed)
         if self.policy == "ooco":
             slo = (None if relaxed
                    else self._effective_slo(slot.online, slot.offline))
@@ -362,12 +382,37 @@ class PoolRuntime:
                 slo=slo, budget_tokens=self.chunk_budget or None,
                 relaxed_cap=self.relaxed_decode_cap,
                 mem_budget_bytes=None if relaxed else self._pool_kv_bytes(slot),
-                rng=self.rng)
+                rng=self.rng, horizon=horizon)
         decode = self._select_batch(slot, relaxed)
         return sch.token_budget_schedule(
             slot.online, slot.offline, pf_req, remaining, self.pm,
             slo=None, budget_tokens=self.chunk_budget or None,
-            relaxed_cap=self.relaxed_decode_cap, decode_override=decode)
+            relaxed_cap=self.relaxed_decode_cap, decode_override=decode,
+            horizon=horizon)
+
+    def _horizon_allowance(self, relaxed: bool) -> int:
+        """Upper bound on this round's decode horizon before the per-round
+        §3.4.1 clamp (``sch.decode_horizon_steps``) refines it."""
+        if not relaxed or self.horizon_req == 1:
+            return 1
+        return (self.max_horizon if self.horizon_req == "auto"
+                else min(self.horizon_req, self.max_horizon))
+
+    def _choose_horizon(self, slot: EngineSlot, batch: list[Request],
+                        allowance: int) -> int:
+        """Per-round K: the §3.4.1-aware clamp (queued/resident online work
+        forces K=1), the roofline choice for "auto", then the engine's page
+        claim-ahead capacity."""
+        if allowance <= 1 or not batch:
+            return 1
+        k = sch.decode_horizon_steps(
+            batch, self.pm, requested=self.horizon_req,
+            queued_online=bool(self.online_queue) or bool(self.incoming_online()),
+            preempt_latency=0.25 * self.slo_ttft,
+            max_horizon=allowance)
+        if k > 1:
+            k = slot.engine.max_horizon_for([r.rid for r in batch], k)
+        return k
 
     def _after_chunk(self, slot: EngineSlot, req: Request, now: float,
                      step_lat: float) -> float:
@@ -386,7 +431,10 @@ class PoolRuntime:
         if self.policy == "ooco" and req.kind != Kind.ONLINE:
             slot.offline.append(req)         # decode on relaxed until pulled
             return 0.0
-        return self._place_on_strict(req, slot)
+        # push transfer overlaps the source round's compute (charged as
+        # max at the round level, not summed here)
+        self._push_cost += self._place_on_strict(req, slot)
+        return 0.0
 
     def _prefill_cost(self, est_latency: float, layers_run: int,
                       measured: float) -> float:
@@ -424,7 +472,7 @@ class PoolRuntime:
                 eng.cache.free(req.rid)
                 self._finish(req, eng, now + cost)
                 return cost
-            cost += self._place_on_strict(req, slot)
+            self._push_cost += self._place_on_strict(req, slot)
             return cost
         return self._prefill_offline(slot, now)
 
@@ -457,7 +505,7 @@ class PoolRuntime:
         if self.policy == "ooco":
             slot.offline.append(req)     # decode on relaxed until pulled
         else:
-            cost += self._place_on_strict(req, slot)
+            self._push_cost += self._place_on_strict(req, slot)
         return cost
 
     def _next_offline_for(self, slot: EngineSlot):
@@ -710,9 +758,15 @@ class PoolRuntime:
             if chunk:
                 chunk = self._fit_chunk(slot, pf_req, chunk,
                                         exclude={r.rid for r in batch})
+            allowance = plan.horizon
         else:
             batch = self._fit_batch(slot, self._select_batch(slot, relaxed))
             chunk = 0
+            allowance = self._horizon_allowance(relaxed)
+        # multi-step horizons apply only to chunkless rounds: a dropped
+        # chunk (page pressure) falls back to K=1, keeping today's
+        # preemption boundary exactly when the pool is under pressure
+        horizon = 1 if chunk else self._choose_horizon(slot, batch, allowance)
         if not batch and not chunk:
             if (pf_req is not None and prefill in slot.prefilling
                     and not slot.offline):
@@ -725,6 +779,10 @@ class PoolRuntime:
         if chunk:
             est = self.pm.mixed_estimate(
                 chunk, pf_req.prefill_tokens_done + chunk, dec_ctx)
+        elif horizon > 1:
+            # one dispatch overhead for the whole horizon — the virtual
+            # clock charges the amortization the fused dispatch buys
+            est = self.pm.horizon_estimate(dec_ctx, horizon)
         else:
             est = self.pm.decode_estimate(dec_ctx)
         slot.last_bottleneck = est.bottleneck
@@ -736,9 +794,14 @@ class PoolRuntime:
                 online_lat / self.slo_tpot, 1.0)
         virtual = self.clock.virtual
         before = [r.decode_time_sum for r in batch] if virtual else None
+        active = ([min(horizon, r.remaining) for r in batch]
+                  if horizon > 1 else None)
         t0 = time.perf_counter()
         if chunk:
             slot.engine.mixed_step([r.rid for r in batch], pf_req.rid, chunk)
+        elif horizon > 1:
+            slot.engine.decode_horizon([r.rid for r in batch], horizon)
+            self.metrics.horizon_rounds += 1
         else:
             slot.engine.decode_step([r.rid for r in batch])
         dt = time.perf_counter() - t0
@@ -746,8 +809,11 @@ class PoolRuntime:
         if virtual:
             # the engine charged measured wall time; replace with modeled
             # time so TPOT metrics are bit-deterministic across replays
-            for r, b in zip(batch, before):
-                r.decode_time_sum = b + est.latency
+            # (a horizon row is charged its amortized share of the fused
+            # dispatch — early-exit rows only for the steps they ran)
+            for i, (r, b) in enumerate(zip(batch, before)):
+                share = (active[i] / horizon) if active is not None else 1.0
+                r.decode_time_sum = b + est.latency * share
         if not relaxed:
             self.measured_tpot = 0.8 * self.measured_tpot + 0.2 * step_lat
         for r in batch:
@@ -897,6 +963,7 @@ class PoolRuntime:
         # chunk-boundary pauses of in-progress offline prefills
         preempt = (sum(s.engine.stats.preemptions for s in self.relaxed_pool)
                    + self.metrics.chunk_preemptions)
+        pools = self.strict_pool + self.relaxed_pool
         return {
             "policy": self.policy,
             "n_strict": len(self.strict_pool),
@@ -919,6 +986,14 @@ class PoolRuntime:
             "preemptions": int(preempt),
             "chunks": self.metrics.chunks,
             "chunk_preemptions": self.metrics.chunk_preemptions,
+            # host_syncs = device->host syncs on the token path (one per
+            # engine dispatch that returns tokens); horizon_steps = decode
+            # iterations executed inside K>1 fused horizons — together they
+            # record how much host round-tripping the horizons removed
+            "host_syncs": int(sum(s.engine.stats.host_syncs for s in pools)),
+            "horizon_steps": int(sum(s.engine.stats.horizon_steps
+                                     for s in pools)),
+            "horizon_rounds": self.metrics.horizon_rounds,
             "migrations": self.metrics.migrations,
             "pulls": self.metrics.pulls,
             "evictions": self.metrics.evictions,

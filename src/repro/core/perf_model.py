@@ -340,6 +340,84 @@ class PerfModel:
                 hi = mid - 1
         return best
 
+    def horizon_estimate(self, decode_ctx: Sequence[int],
+                         steps: int) -> StepEstimate:
+        """One **K-step fused decode horizon**: ``steps`` consecutive decode
+        iterations for a batch with the given context lengths executed as a
+        single dispatch, so the static per-iteration overhead ``O_d`` is
+        paid ONCE per horizon instead of once per token — the structural
+        win of multi-step decode, exactly like ``mixed_estimate`` pays one
+        overhead for the fused chunk+decode round.
+
+        Per-step attention grows by one token per request inside the
+        horizon; the sum over steps equals ``steps`` x the estimate at the
+        midpoint context ``c + (K-1)/2`` (exact while attention cost is
+        linear in context — i.e. away from a sliding-window cap)."""
+        ctx = np.asarray(list(decode_ctx), np.float64)
+        steps = max(int(steps), 1)
+        hw = self.hw
+        if ctx.size == 0:
+            return StepEstimate(hw.O_d, 0, 0, 0, 0, 0, hw.O_d, 0, "overhead")
+        if steps == 1:
+            return self._fast_decode(ctx)
+        gf, gb, gl, gc, gm = self._decode_batch_terms(float(len(ctx)))
+        mid = ctx + (steps - 1) / 2.0
+        af, ab, ac, am = self._decode_attn_fb(mid)
+        al = self.decode_attn_time(mid).sum()
+        lat = float(hw.O_d + steps * (gl + al))
+        fl, by = float(steps * (gf + af)), float(steps * (gb + ab))
+        comp, mem = float(steps * (gc + ac)), float(steps * (gm + am))
+        work = lat - hw.O_d
+        if hw.O_d > work:
+            bn = "overhead"
+        elif comp > 1.3 * mem:
+            bn = "compute"
+        elif mem > 1.3 * comp:
+            bn = "memory"
+        else:
+            bn = "balanced"
+        return StepEstimate(latency=lat, flops=fl, bytes=by, compute_time=comp,
+                            memory_time=mem, comm_time=0.0, overhead=hw.O_d,
+                            kv_bytes=self.kv_bytes(ctx + steps - 1),
+                            bottleneck=bn)
+
+    def suggest_decode_horizon(self, decode_ctx: Sequence[int], *,
+                               slo: float | None = None,
+                               preempt_latency: float | None = None,
+                               dispatch_overhead: float | None = None,
+                               overhead_frac: float = 0.02,
+                               max_horizon: int = 16) -> int:
+        """Roofline-chosen multi-step decode horizon K.
+
+        Amortization: the smallest K that makes the per-dispatch overhead
+        (``O_d``, or the larger measured ``dispatch_overhead`` when the
+        caller has timed the real host gap between sync and next dispatch)
+        an ``overhead_frac`` minority of the horizon's latency — beyond
+        that, longer horizons buy nothing on the roofline and only coarsen
+        scheduling granularity.
+
+        Bounds: a horizon is ONE uninterruptible dispatch whose tokens
+        arrive in a burst at the end, so its total latency must stay under
+        the TPOT ``slo`` (latency-strict rounds) and under the §3.4.1
+        ``preempt_latency`` bound (a queued online request waits at most
+        one horizon before preemption can fire). Returns 1 when even a
+        single step sits at a bound — never worse than today's behavior."""
+        ctx = np.asarray(list(decode_ctx), np.float64)
+        if ctx.size == 0:
+            return 1
+        ov = float(self.hw.O_d if dispatch_overhead is None
+                   else max(dispatch_overhead, self.hw.O_d))
+        w = max(self._fast_decode(ctx).latency - self.hw.O_d, 1e-12)
+        k = int(np.ceil(ov * (1.0 - overhead_frac) / (overhead_frac * w)))
+        k = min(max(k, 1), max(int(max_horizon), 1))
+        bound = min((b for b in (slo, preempt_latency) if b is not None),
+                    default=None)
+        if bound is not None:
+            while k > 1 and (self.horizon_estimate(ctx, k).latency
+                             - self.hw.O_d + ov) > bound:
+                k -= 1
+        return k
+
     def decode_estimate(self, context_lens: Sequence[int],
                         detail: bool = False) -> StepEstimate:
         """One decode step for a batch whose requests have the given context

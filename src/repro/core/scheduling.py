@@ -92,14 +92,18 @@ def mix_decoding_selection(
 @dataclass
 class MixedPlan:
     """One engine round under the token-budget scheduler: the decode batch
-    plus (optionally) a prefill chunk fused into the same dispatch."""
+    plus (optionally) a prefill chunk fused into the same dispatch, OR a
+    multi-step decode horizon (``horizon`` fused decode iterations — only
+    ever > 1 on chunkless rounds; a fused mixed step is single-step by
+    construction)."""
     decode: list[Request]
     prefill: Request | None = None
     chunk_tokens: int = 0      # prompt tokens of `prefill` to run this round
+    horizon: int = 1           # fused decode iterations this round
 
     @property
     def total_tokens(self) -> int:
-        return len(self.decode) + self.chunk_tokens
+        return len(self.decode) * self.horizon + self.chunk_tokens
 
 
 def token_budget_schedule(
@@ -116,6 +120,7 @@ def token_budget_schedule(
     rng: random.Random | None = None,
     bucket: int = 8,
     decode_override: list[Request] | None = None,
+    horizon: int = 1,
 ) -> MixedPlan:
     """Sarathi-style token-budget plan replacing the prefill-then-decode
     serialization: decode tokens ride first (one token each — they carry the
@@ -132,7 +137,11 @@ def token_budget_schedule(
     bucket, so a resident decode batch can never starve prefill progress.
     ``budget_tokens`` overrides the roofline suggestion (``--chunk-tokens
     N``); ``decode_override`` lets a caller keep its own decode-batch
-    policy (the runtime's baselines) while the budget sizes the chunk."""
+    policy (the runtime's baselines) while the budget sizes the chunk.
+    ``horizon`` is the caller's multi-step decode-horizon allowance: it is
+    recorded in the plan only when NO chunk rides the round (a fused mixed
+    step advances one decode token per resident by construction), so the
+    token budget of a chunkless round is decode-batch x horizon."""
     if decode_override is not None:
         decode = list(decode_override)
     elif slo is not None:
@@ -142,7 +151,7 @@ def token_budget_schedule(
     else:
         decode = list(online) + list(offline)[:relaxed_cap]
     if prefill is None or prefill_remaining <= 0:
-        return MixedPlan(decode)
+        return MixedPlan(decode, horizon=max(int(horizon), 1))
     dec_ctx = [r.context_len for r in decode]
     netted = budget_tokens is None
     if netted:
@@ -179,8 +188,47 @@ def token_budget_schedule(
                 hi = mid - 1
         chunk = best
     if chunk <= 0:
-        return MixedPlan(decode)
+        return MixedPlan(decode, horizon=max(int(horizon), 1))
     return MixedPlan(decode, prefill, int(chunk))
+
+
+def decode_horizon_steps(
+    batch: Sequence[Request],
+    pm: PerfModel,
+    *,
+    requested: int | str | None,
+    strict: bool = False,
+    queued_online: bool = False,
+    preempt_latency: float | None = None,
+    max_horizon: int = 16,
+) -> int:
+    """§3.4.1-aware multi-step decode-horizon choice for one engine round.
+
+    Latency-relaxed all-offline rounds amortize the per-dispatch overhead
+    over roofline-chosen horizons (``requested="auto"`` routes through
+    ``PerfModel.suggest_decode_horizon`` under the ``preempt_latency``
+    bound — a horizon is one uninterruptible dispatch, so a queued online
+    request waits at most one horizon). Latency-strict rounds, rounds
+    decoding ANY online request, and rounds with an online request already
+    queued clamp to K=1 so fast preemption and pull migration keep today's
+    boundaries. K is also capped by the longest remaining output in the
+    batch — steps past every row's ``max_new_tokens`` are pure waste."""
+    if requested in (None, 0, 1, "0", "1") or not batch:
+        return 1
+    if strict or queued_online:
+        return 1
+    if any(r.kind is Kind.ONLINE for r in batch):
+        return 1
+    cap = min(int(max_horizon), max(r.remaining for r in batch))
+    if cap <= 1:
+        return 1
+    if requested == "auto":
+        k = pm.suggest_decode_horizon(
+            [r.context_len for r in batch],
+            preempt_latency=preempt_latency, max_horizon=cap)
+    else:
+        k = int(requested)
+    return max(1, min(k, cap))
 
 
 # ---------------------------------------------------------------------------

@@ -52,6 +52,14 @@ The per-iteration hot path is allocation- and sync-free:
 * Per-layer parameters are pre-sliced once at construction; per-step token
   bookkeeping uses preallocated numpy rings (``TokenRing``), not Python
   lists.
+* **Multi-step decode horizons**: ``decode_horizon(rids, K)`` fuses K
+  consecutive decode iterations into ONE jitted dispatch — a
+  ``jax.lax.scan`` over the same per-step core as ``decode_step``, with the
+  sampled token fed back on-device, positions/lengths advanced inside the
+  scan, pages claimed ahead so no request runs off its block table
+  mid-horizon, and early-exit masking for rows that hit ``max_new_tokens``.
+  One (K, B) token block crosses the device boundary per horizon instead of
+  one (B,) sync per token; ``PerfModel.suggest_decode_horizon`` picks K.
 
 ``benchmarks/bench_decode_hotpath.py`` measures steps/s and host overhead
 per step and verifies pool donation from the lowered HLO;
@@ -183,6 +191,9 @@ class EngineStats:
     decode_steps: int = 0
     prefill_chunks: int = 0   # chunk-granular prefill dispatches
     mixed_steps: int = 0      # fused prefill-chunk + decode dispatches
+    host_syncs: int = 0       # device->host syncs on the token path
+                              # (one per dispatch that returns tokens)
+    horizon_steps: int = 0    # decode iterations run inside K>1 horizons
     prefill_seconds: float = 0.0
     decode_seconds: float = 0.0
 
@@ -231,6 +242,7 @@ class ServingEngine:
             self._sample_fn = src._sample_fn
             self._decode_fns = src._decode_fns
             self._mixed_fns = src._mixed_fns
+            self._horizon_fns = src._horizon_fns
             self._layer_params_cached = src._layer_params_cached
         else:
             self._layer_fn = self._build_layer_fn()
@@ -239,6 +251,7 @@ class ServingEngine:
             self._sample_fn = jax.jit(sample_tokens)
             self._decode_fns: dict[tuple[int, int], Callable] = {}
             self._mixed_fns: dict[tuple, Callable] = {}
+            self._horizon_fns: dict[tuple, Callable] = {}
             # per-layer params sliced once (not jax.tree.map per layer per prefill)
             self._layer_params_cached = [
                 jax.tree.map(lambda a, i=i: a[i], params["layers"])
@@ -264,6 +277,16 @@ class ServingEngine:
     def _next_key(self):
         self._sample_step += 1
         return self._base_key, np.int32(self._sample_step)
+
+    def _next_key_block(self, n: int):
+        """Reserve ``n`` consecutive sample steps for a multi-step horizon.
+        Returns (key, first_step); step t of the horizon folds in
+        ``first_step + t`` — exactly the step ids n serial ``_next_key``
+        calls would have produced, so K-step horizons sample bit-identically
+        to K serial decode steps."""
+        first = np.int32(self._sample_step + 1)
+        self._sample_step += n
+        return self._base_key, first
 
     # ------------------------------------------------------------------
     # layer-interruptible prefill
@@ -367,6 +390,7 @@ class ServingEngine:
         req.generated = 1
         req.phase = Phase.DECODING
         self.stats.prefill_tokens += S
+        self.stats.host_syncs += 1
         self.stats.prefill_seconds += time.perf_counter() - t0
         return "done"
 
@@ -402,24 +426,20 @@ class ServingEngine:
         set of (bucket, pages) jit variants. Shared with the benchmarks."""
         return 1 << (pages - 1).bit_length()
 
-    def _decode_fn(self, bucket: int, pages: int, sampled: bool = False):
-        """``sampled=False`` specializes the step to plain argmax — the
-        all-greedy default never pays the sampler's full-vocab sort."""
-        key = (bucket, pages, sampled)
-        if key in self._decode_fns:
-            return self._decode_fns[key]
+    def _decode_core(self):
+        """One decode iteration over the layer stack — the computation
+        SHARED by the plain jitted step and the K-step horizon scan, so the
+        two paths are token-identical by construction. Returns
+        ``core(params, tokens, positions, tables, lengths, page_ids, offs,
+        k_pool, v_pool) -> (logits, k_pool, v_pool)``."""
         cfg = self.cfg
         model = self.model
         use_ref, interpret = backend_flags(self.backend)
+        hd = cfg.head_dim_
 
-        @functools.partial(jax.jit, donate_argnums=(5, 6))
-        def step(params, tokens, positions, tables, lengths, k_pool, v_pool,
-                 key, sample_step, temps, top_ks):
+        def core(params, tokens, positions, tables, lengths, page_ids, offs,
+                 k_pool, v_pool):
             x = model._embed(params, tokens[:, None])
-            hd = cfg.head_dim_
-            page_ids = jnp.take_along_axis(
-                tables, (positions // self.cache.page_size)[:, None], axis=1)[:, 0]
-            offs = positions % self.cache.page_size
 
             # The pools ride in the scan CARRY (not xs/ys): per-layer writes
             # are dynamic-update-slices into the carried buffer, which XLA
@@ -471,7 +491,28 @@ class ServingEngine:
             (x, k_pool, v_pool), _ = jax.lax.scan(
                 body, (x, k_pool, v_pool),
                 (params["layers"], jnp.arange(cfg.num_layers)))
-            logits = model._logits(params, x[:, 0])
+            return model._logits(params, x[:, 0]), k_pool, v_pool
+
+        return core
+
+    def _decode_fn(self, bucket: int, pages: int, sampled: bool = False):
+        """``sampled=False`` specializes the step to plain argmax — the
+        all-greedy default never pays the sampler's full-vocab sort."""
+        key = (bucket, pages, sampled)
+        if key in self._decode_fns:
+            return self._decode_fns[key]
+        core = self._decode_core()
+        page_size = self.cache.page_size
+
+        @functools.partial(jax.jit, donate_argnums=(5, 6))
+        def step(params, tokens, positions, tables, lengths, k_pool, v_pool,
+                 key, sample_step, temps, top_ks):
+            page_ids = jnp.take_along_axis(
+                tables, (positions // page_size)[:, None], axis=1)[:, 0]
+            offs = positions % page_size
+            logits, k_pool, v_pool = core(params, tokens, positions, tables,
+                                          lengths, page_ids, offs,
+                                          k_pool, v_pool)
             if sampled:
                 nxt = sample_tokens(logits, jax.random.fold_in(key, sample_step),
                                     temps, top_ks)
@@ -481,6 +522,56 @@ class ServingEngine:
 
         self._decode_fns[key] = step
         return step
+
+    def _horizon_fn(self, bucket: int, pages: int, steps: int,
+                    sampled: bool = False):
+        """Jitted K-step decode horizon: ``jax.lax.scan`` over ``steps``
+        consecutive decode iterations of the SAME per-step core as
+        ``_decode_fn``, with the sampled token fed back on-device —
+        positions/lengths advance inside the scan, both KV pools ride the
+        donated carry, and the host sees only the stacked (K, B) token
+        block. Rows whose ``active_steps`` budget is exhausted (request hit
+        ``max_new_tokens`` mid-horizon, or bucket padding) are masked: their
+        KV writes are redirected to the reserved trash page 0, their
+        position freezes, and their carried token repeats — they can never
+        corrupt live state or emit extra tokens."""
+        fkey = (bucket, pages, steps, sampled)
+        if fkey in self._horizon_fns:
+            return self._horizon_fns[fkey]
+        core = self._decode_core()
+        page_size = self.cache.page_size
+
+        @functools.partial(jax.jit, donate_argnums=(4, 5))
+        def horizon(params, tokens, positions, tables, k_pool, v_pool,
+                    active_steps, key, first_step, temps, top_ks):
+            def step_body(carry, t):
+                tokens, positions, kpool, vpool = carry
+                active = t < active_steps
+                lengths = positions + 1
+                page_ids = jnp.take_along_axis(
+                    tables, (positions // page_size)[:, None], axis=1)[:, 0]
+                page_ids = jnp.where(active, page_ids, 0)
+                offs = positions % page_size
+                logits, kpool, vpool = core(params, tokens, positions, tables,
+                                            lengths, page_ids, offs,
+                                            kpool, vpool)
+                if sampled:
+                    nxt = sample_tokens(
+                        logits, jax.random.fold_in(key, first_step + t),
+                        temps, top_ks)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                nxt = jnp.where(active, nxt, tokens)
+                positions = jnp.where(active, positions + 1, positions)
+                return (nxt, positions, kpool, vpool), nxt
+
+            (tokens, positions, k_pool, v_pool), toks = jax.lax.scan(
+                step_body, (tokens, positions, k_pool, v_pool),
+                jnp.arange(steps, dtype=jnp.int32))
+            return toks, k_pool, v_pool
+
+        self._horizon_fns[fkey] = horizon
+        return horizon
 
     def decode_step(self, rids: list[int]) -> dict[int, int]:
         """One continuous-batching decode iteration for the given requests;
@@ -495,14 +586,20 @@ class ServingEngine:
             out.update(self._decode_chunk(rids[i: i + max_bucket]))
         return out
 
-    def _decode_args(self, rids: list[int]):
+    def _decode_args(self, rids: list[int], claim_ahead: list[int] | None = None):
         """Build the padded device args of a decode batch (shared by the
-        plain decode step and the fused mixed step)."""
+        plain decode step, the fused mixed step, and the K-step horizon).
+
+        ``claim_ahead`` (per-rid step counts) grows each block table to
+        cover the horizon's writes at positions
+        ``[context_len - 1, context_len - 1 + a)`` BEFORE the dispatch —
+        the page claim-ahead; ``None`` is the single-step claim."""
         B = len(rids)
         bucket = self._bucket(B)
-        for r in rids:
+        for i, r in enumerate(rids):
             req = self.requests[r]
-            self.cache.ensure(r, req.context_len)
+            self.cache.ensure(r, req.context_len if claim_ahead is None
+                              else req.context_len - 1 + claim_ahead[i])
         pages = self.pad_pages(max(len(self.cache.tables[r]) for r in rids))
         tables = self.cache.batch_tables(rids, pad_to=pages)
         # the input token is the last one in the buffer; its position is
@@ -552,7 +649,98 @@ class ServingEngine:
             self.cache.k_pool, self.cache.v_pool,
             key, sample_step, jnp.asarray(temps), jnp.asarray(topks))
         nxt = np.asarray(nxt_dev)   # (bucket,) ids — the only device->host sync
+        self.stats.host_syncs += 1
         return self._decode_finish(rids, nxt, time.perf_counter() - t0)
+
+    # ------------------------------------------------------------------
+    # multi-step decode horizons (K fused iterations, one host sync)
+    # ------------------------------------------------------------------
+    def max_horizon_for(self, rids: list[int], steps: int) -> int:
+        """Largest horizon <= ``steps`` whose page claim-ahead fits the free
+        pool (the claim is monotone in steps, and the K=1 claim is exactly
+        what ``decode_step`` would take, so an admitted batch always gets at
+        least 1)."""
+        free = self.cache.allocator.free_pages
+
+        def need(k: int) -> int:
+            tot = 0
+            for r in rids:
+                req = self.requests[r]
+                a = min(k, max(req.remaining, 1))
+                tot += max(0, self.cache.pages_for(req.context_len - 1 + a)
+                           - len(self.cache.tables.get(r, ())))
+            return tot
+
+        while steps > 1 and need(steps) > free:
+            steps -= 1
+        return max(steps, 1)
+
+    def decode_horizon(self, rids: list[int], steps: int) -> dict[int, list[int]]:
+        """Run up to ``steps`` consecutive decode iterations for ``rids`` as
+        ONE jitted dispatch: the sampled token of step t feeds step t+1
+        on-device, so only a (steps, B) token block crosses the device
+        boundary — one host sync per horizon instead of one per token.
+        Token-identical to ``steps`` serial ``decode_step`` calls (greedy
+        and seeded sampling) for a fixed batch. Requests reaching
+        ``max_new_tokens`` mid-horizon stop emitting (masked rows). Batches
+        larger than the biggest bucket run as multiple bucket-sized
+        horizons. Returns rid -> list of new tokens."""
+        if not rids:
+            return {}
+        steps = int(steps)
+        if steps <= 1:
+            return {r: [t] for r, t in self.decode_step(rids).items()}
+        out: dict[int, list[int]] = {}
+        max_bucket = self.decode_buckets[-1]
+        for i in range(0, len(rids), max_bucket):
+            out.update(self._horizon_chunk(rids[i: i + max_bucket], steps))
+        return out
+
+    def _horizon_chunk(self, rids: list[int], steps: int) -> dict[int, list[int]]:
+        t0 = time.perf_counter()
+        ahead = [min(steps, self.requests[r].remaining) for r in rids]
+        assert min(ahead) >= 1, "request already finished"
+        bucket, pages, tokens, positions, tables, _ = self._decode_args(
+            rids, claim_ahead=ahead)
+        active = np.zeros(bucket, np.int32)
+        active[: len(rids)] = ahead
+        temps, topks = self._sampling_arrays(rids, bucket)
+        sampled = (self.sampling.temperature > 0
+                   or any(r in self.req_sampling for r in rids))
+        fn = self._horizon_fn(bucket, pages, steps, sampled)
+        key, first_step = self._next_key_block(steps)
+        toks_dev, self.cache.k_pool, self.cache.v_pool = fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(tables), self.cache.k_pool, self.cache.v_pool,
+            jnp.asarray(active), key, first_step,
+            jnp.asarray(temps), jnp.asarray(topks))
+        nxt = np.asarray(toks_dev)  # (steps, bucket) — the ONLY host sync
+        dt = time.perf_counter() - t0
+        out: dict[int, list[int]] = {}
+        total = 0
+        for i, r in enumerate(rids):
+            req = self.requests[r]
+            a = int(active[i])
+            toks = [int(x) for x in nxt[:a, i]]
+            buf = self.token_buf[r]
+            for tok in toks:
+                buf.append(tok)
+            req.generated += a
+            # the horizon's wall time amortizes over its steps; a row that
+            # exits early is only charged for the steps it ran
+            req.decode_time_sum += dt * a / steps
+            total += a
+            out[r] = toks
+            if req.done:
+                req.phase = Phase.FINISHED
+                self.cache.free(r)
+                self.req_sampling.pop(r, None)
+        self.stats.decode_tokens += total
+        self.stats.decode_steps += steps
+        self.stats.horizon_steps += steps
+        self.stats.host_syncs += 1
+        self.stats.decode_seconds += dt
+        return out
 
     # ------------------------------------------------------------------
     # fused mixed prefill/decode step (chunked prefill)
@@ -768,6 +956,7 @@ class ServingEngine:
             self.cache.k_pool, self.cache.v_pool,
             key, sample_step, jnp.asarray(temps), jnp.asarray(topks))
         nxt = np.asarray(nxt_dev)   # (bucket + 1,) — single host sync
+        self.stats.host_syncs += 1
         dt = time.perf_counter() - t0
         out = self._decode_finish(rids, nxt, dt) if rids else {}
         state.done += c

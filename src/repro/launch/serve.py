@@ -35,7 +35,7 @@ class CoLocatedServer(PoolRuntime):
                          clock=WallClock(), slo_tpot=slo_tpot,
                          num_pages=num_pages, page_size=page_size, seed=seed,
                          backend=backend, decode_buckets=(8,),
-                         chunk_tokens=0)
+                         chunk_tokens=0, decode_horizon=1)
 
     @property
     def relaxed(self):
@@ -76,6 +76,13 @@ def main(argv=None):
                          "(PerfModel.suggest_chunk_tokens), N fixes it, "
                          "0 disables chunking (legacy whole-prompt prefill "
                          "with layer-level interruption)")
+    ap.add_argument("--decode-horizon", default="auto",
+                    help="multi-step decode horizon on latency-relaxed "
+                         "rounds: 'auto' picks K from the decode roofline "
+                         "(PerfModel.suggest_decode_horizon, amortizing the "
+                         "per-dispatch overhead under the §3.4.1 preemption "
+                         "bound), N fixes it, 1 disables fusion (one host "
+                         "sync per token — today's behavior)")
     ap.add_argument("--duration", type=float, default=20.0)
     ap.add_argument("--online-qps", type=float, default=0.5)
     ap.add_argument("--offline-qps", type=float, default=1.0)
@@ -94,11 +101,14 @@ def main(argv=None):
     hw = replay_hw() if args.virtual_clock else None
     chunk = args.chunk_tokens if args.chunk_tokens == "auto" \
         else int(args.chunk_tokens)
+    horizon = args.decode_horizon if args.decode_horizon == "auto" \
+        else int(args.decode_horizon)
     runtime = PoolRuntime(cfg, policy=args.policy, n_strict=args.strict,
                           n_relaxed=args.relaxed, clock=clock,
                           slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot,
                           num_pages=args.num_pages, seed=args.seed,
-                          backend=args.backend, hw=hw, chunk_tokens=chunk)
+                          backend=args.backend, hw=hw, chunk_tokens=chunk,
+                          decode_horizon=horizon)
     online, offline = build_traces(args, cfg)
     summary = runtime.run(online, offline, duration=args.duration,
                           max_prompt=args.max_prompt,

@@ -1,0 +1,315 @@
+"""Multi-step decode horizons (ISSUE 5).
+
+* **K-step vs K serial parity**: one ``decode_horizon`` dispatch must emit
+  bit-identical tokens to K serial ``decode_step`` calls — greedy AND
+  seeded temperature/top-k sampling — while performing exactly one
+  device->host sync (``EngineStats.host_syncs``).
+* **Early exit**: a request hitting ``max_new_tokens`` mid-horizon emits no
+  extra tokens, frees its pages, and leaves co-batched requests exact.
+* **Page claim-ahead**: horizons crossing page boundaries never run off the
+  request's block table.
+* **Roofline choice**: ``PerfModel.suggest_decode_horizon`` amortizes the
+  dispatch overhead and respects the SLO/preemption-latency bounds;
+  ``horizon_estimate`` charges ONE static overhead per horizon.
+* **Runtime**: virtual-clock replays with ``decode_horizon="auto"`` stay
+  bit-deterministic, keep chunk-boundary preemption intact, never run
+  horizons on the strict pool, and lose no offline throughput.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster.runtime import PoolRuntime, VirtualClock, replay_hw
+from repro.configs import get_config
+from repro.core import scheduling as sch
+from repro.core.perf_model import PerfModel
+from repro.core.request import Kind, Phase, Request
+from repro.data import traces as tr
+from repro.engine.engine import SamplingParams, ServingEngine
+from repro.models.model import build_model
+
+SLO_TTFT = 1.0
+SLO_TPOT = 0.030
+
+
+@pytest.fixture(scope="module")
+def built():
+    cfg = get_config("qwen2.5-7b").reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params, [None]   # last slot: shared kernel donor
+
+
+def _prompts(cfg, seed, lens):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(0, cfg.vocab_size, n)) for n in lens]
+
+
+def _engine_with(model, params, prompts, output_len, sampling=None):
+    eng = ServingEngine(model, params, num_pages=64, page_size=8,
+                        sampling=sampling)
+    reqs = []
+    for p in prompts:
+        r = Request(Kind.OFFLINE, 0.0, len(p), output_len)
+        eng.add_request(r, p)
+        eng.prefill(r.rid)
+        reqs.append(r)
+    return eng, reqs
+
+
+class TestHorizonParity:
+    @pytest.mark.parametrize("sampling", [
+        None, SamplingParams(temperature=0.8, top_k=16, seed=3)],
+        ids=["greedy", "sampled"])
+    def test_k_step_horizon_matches_k_serial_steps(self, built, sampling):
+        cfg, model, params, _ = built
+        prompts = _prompts(cfg, 0, (13, 21, 7))
+        K = 5
+        eng_s, reqs_s = _engine_with(model, params, prompts, 20, sampling)
+        for _ in range(K):
+            eng_s.decode_step([r.rid for r in reqs_s])
+        eng_h, reqs_h = _engine_with(model, params, prompts, 20, sampling)
+        syncs0 = eng_h.stats.host_syncs
+        out = eng_h.decode_horizon([r.rid for r in reqs_h], K)
+        # exactly ONE device->host sync for the whole horizon
+        assert eng_h.stats.host_syncs == syncs0 + 1
+        assert eng_h.stats.horizon_steps == K
+        for rs, rh in zip(reqs_s, reqs_h):
+            assert (eng_s.token_buf[rs.rid].tolist()
+                    == eng_h.token_buf[rh.rid].tolist())
+            assert len(out[rh.rid]) == K
+
+    def test_finish_mid_horizon_emits_no_extra_tokens(self, built):
+        cfg, model, params, _ = built
+        prompts = _prompts(cfg, 1, (11, 16))
+        # 3 outputs total: 1 from prefill + 2 decode steps, horizon of 8
+        eng_s, reqs_s = _engine_with(model, params, prompts, 3)
+        while any(not r.done for r in reqs_s):
+            eng_s.decode_step([r.rid for r in reqs_s if not r.done])
+        eng_h, reqs_h = _engine_with(model, params, prompts, 3)
+        out = eng_h.decode_horizon([r.rid for r in reqs_h], 8)
+        for rs, rh in zip(reqs_s, reqs_h):
+            assert rh.generated == rh.output_len == 3
+            assert rh.phase == Phase.FINISHED
+            assert len(out[rh.rid]) == 2          # masked past max_new_tokens
+            assert (eng_s.token_buf[rs.rid].tolist()
+                    == eng_h.token_buf[rh.rid].tolist())
+            assert rh.rid not in eng_h.cache.tables   # pages freed
+
+    def test_mixed_remaining_lengths_stay_exact(self, built):
+        """A short-output request going inactive mid-horizon must not
+        perturb the rows still decoding (its masked writes land in the
+        trash page, not in live state)."""
+        cfg, model, params, _ = built
+        prompts = _prompts(cfg, 2, (9, 14))
+        eng_s, reqs_s = _engine_with(model, params, prompts, 12)
+        reqs_s[0].output_len = 2                  # finishes after 1 decode
+        while any(not r.done for r in reqs_s):
+            eng_s.decode_step([r.rid for r in reqs_s if not r.done])
+        eng_h, reqs_h = _engine_with(model, params, prompts, 12)
+        reqs_h[0].output_len = 2
+        eng_h.decode_horizon([r.rid for r in reqs_h], 6)
+        while any(not r.done for r in reqs_h):
+            eng_h.decode_horizon([r.rid for r in reqs_h if not r.done], 6)
+        for rs, rh in zip(reqs_s, reqs_h):
+            assert (eng_s.token_buf[rs.rid].tolist()
+                    == eng_h.token_buf[rh.rid].tolist())
+
+    def test_page_claim_ahead_across_boundaries(self, built):
+        """A horizon whose writes cross page boundaries claims the pages
+        BEFORE the dispatch and stays token-exact."""
+        cfg, model, params, _ = built
+        prompts = _prompts(cfg, 3, (8,))          # exactly one full page
+        eng_s, reqs_s = _engine_with(model, params, prompts, 20)
+        for _ in range(18):
+            eng_s.decode_step([reqs_s[0].rid])
+        eng_h, reqs_h = _engine_with(model, params, prompts, 20)
+        r = reqs_h[0]
+        pages_before = len(eng_h.cache.tables[r.rid])
+        eng_h.decode_horizon([r.rid], 18)         # crosses 2+ page boundaries
+        assert len(eng_h.cache.tables[r.rid]) > pages_before
+        assert (eng_s.token_buf[reqs_s[0].rid].tolist()
+                == eng_h.token_buf[r.rid].tolist())
+
+    def test_horizon_trace_reuse(self, built):
+        """Repeated horizons at the same (bucket, pages, K) reuse one
+        compiled function."""
+        cfg, model, params, _ = built
+        # prompt sized so both horizons land in the same pad_pages bucket
+        prompts = _prompts(cfg, 4, (20, 20))
+        eng, reqs = _engine_with(model, params, prompts, 30)
+        eng.decode_horizon([r.rid for r in reqs], 4)
+        n = len(eng._horizon_fns)
+        eng.decode_horizon([r.rid for r in reqs], 4)
+        assert len(eng._horizon_fns) == n
+
+    def test_horizon_donates_both_pools(self, built):
+        """The lowered horizon scan must alias both donated pools with zero
+        surviving full-pool copies (same proof as the decode step)."""
+        from benchmarks.bench_decode_hotpath import (donation_report,
+                                                     lower_horizon_step)
+        cfg, model, params, _ = built
+        eng = ServingEngine(model, params, num_pages=64, page_size=8)
+        rep = donation_report(lower_horizon_step(eng, bucket=4, pages=4,
+                                                 steps=4),
+                              eng.cache.k_pool.shape)
+        assert rep["donated_args"] == 2
+        assert rep["full_pool_copies"] == 0
+
+
+class TestSuggestDecodeHorizon:
+    PM = PerfModel(get_config("qwen2.5-7b").reduced(), replay_hw())
+
+    def test_amortizes_dispatch_overhead(self):
+        # small batches are overhead-dominated -> multi-step horizons
+        assert self.PM.suggest_decode_horizon([32] * 2) > 1
+        # a measured host overhead far above O_d demands a longer horizon
+        k_plain = self.PM.suggest_decode_horizon([32] * 4)
+        k_hosty = self.PM.suggest_decode_horizon(
+            [32] * 4, dispatch_overhead=50 * self.PM.hw.O_d)
+        assert k_hosty >= k_plain
+
+    def test_saturated_batches_stay_single_step(self):
+        # large batches amortize O_d already — fusing buys nothing
+        assert self.PM.suggest_decode_horizon([512] * 64) == 1
+
+    def test_respects_preemption_latency_bound(self):
+        ctx = [32] * 2
+        k = self.PM.suggest_decode_horizon(ctx, preempt_latency=0.25)
+        assert self.PM.horizon_estimate(ctx, k).latency <= 0.25 * (1 + 1e-9)
+        # a bound below even one step can't improve on today's behavior
+        assert self.PM.suggest_decode_horizon(ctx, preempt_latency=1e-9) == 1
+
+    def test_horizon_estimate_charges_one_overhead(self):
+        ctx = [64] * 4
+        K = 8
+        one = self.PM.decode_estimate(ctx)
+        hz = self.PM.horizon_estimate(ctx, K)
+        # K fused steps cost less than K serial dispatches but more than 1
+        assert one.latency < hz.latency
+        assert hz.overhead == self.PM.hw.O_d
+        # vs K serial steps at the SAME growing contexts, the saving is
+        # exactly the K-1 amortized dispatch overheads (the midpoint form
+        # is exact while attention is linear in context)
+        serial = sum(self.PM.decode_estimate([c + t for c in ctx]).latency
+                     for t in range(K))
+        saved = (K - 1) * self.PM.hw.O_d
+        assert hz.latency == pytest.approx(serial - saved, rel=1e-9)
+
+
+class TestHorizonScheduling:
+    PM = TestSuggestDecodeHorizon.PM
+
+    def _reqs(self, kind, n, ctx=32, out=16):
+        return [Request(kind, 0.0, ctx, out) for _ in range(n)]
+
+    def test_offline_relaxed_round_gets_horizon(self):
+        batch = self._reqs(Kind.OFFLINE, 2)
+        k = sch.decode_horizon_steps(batch, self.PM, requested="auto",
+                                     preempt_latency=0.25)
+        assert k > 1
+
+    def test_strict_and_queued_online_clamp(self):
+        batch = self._reqs(Kind.OFFLINE, 2)
+        assert sch.decode_horizon_steps(batch, self.PM, requested="auto",
+                                        strict=True) == 1
+        assert sch.decode_horizon_steps(batch, self.PM, requested="auto",
+                                        queued_online=True) == 1
+
+    def test_online_resident_clamps(self):
+        batch = self._reqs(Kind.OFFLINE, 2) + self._reqs(Kind.ONLINE, 1)
+        assert sch.decode_horizon_steps(batch, self.PM,
+                                        requested="auto") == 1
+
+    def test_remaining_output_caps_horizon(self):
+        batch = self._reqs(Kind.OFFLINE, 2, out=3)
+        for r in batch:
+            r.generated = 1
+        assert sch.decode_horizon_steps(batch, self.PM, requested=16) <= 2
+
+    def test_requested_one_is_identity(self):
+        batch = self._reqs(Kind.OFFLINE, 4)
+        for req in (1, None, 0):
+            assert sch.decode_horizon_steps(batch, self.PM,
+                                            requested=req) == 1
+
+    def test_plan_carries_horizon_only_when_chunkless(self):
+        decode = self._reqs(Kind.OFFLINE, 4)
+        plan = sch.token_budget_schedule([], decode, None, 0, self.PM,
+                                         relaxed_cap=8, horizon=4)
+        assert plan.horizon == 4 and plan.chunk_tokens == 0
+        assert plan.total_tokens == 4 * len(plan.decode)
+        pf = Request(Kind.OFFLINE, 0.0, 64, 8)
+        plan = sch.token_budget_schedule([], decode, pf, 64, self.PM,
+                                         relaxed_cap=8, horizon=4)
+        assert plan.chunk_tokens > 0 and plan.horizon == 1
+
+
+# ---------------------------------------------------------------------------
+# pool-runtime integration under the virtual clock
+# ---------------------------------------------------------------------------
+
+def _replay(built, policy, *, seed=0, decode_horizon="auto", n_offline=60,
+            offline_qps=20.0, online_qps=1.2, duration=6.0, max_output=12):
+    cfg, model, params, donor = built
+    rt = PoolRuntime(cfg, policy=policy, n_strict=1, n_relaxed=2,
+                     clock=VirtualClock(), backend="ref", num_pages=256,
+                     page_size=8, slo_ttft=SLO_TTFT, slo_tpot=SLO_TPOT,
+                     hw=replay_hw(), seed=seed, model=model, params=params,
+                     decode_horizon=decode_horizon, kernels_from=donor[0])
+    donor[0] = donor[0] or rt.kernel_donor
+    online = tr.online_trace("ooc", duration=duration, mean_qps=online_qps,
+                             seed=seed)
+    offline = tr.with_uniform_qps(
+        tr.offline_requests(n_offline, seed=seed + 1), offline_qps)
+    summary = rt.run(online, offline, duration=duration, max_prompt=48,
+                     max_output=max_output, drain=False)
+    return summary, rt
+
+
+class TestRuntimeHorizons:
+    @pytest.fixture(scope="class")
+    def auto_runs(self, built):
+        return [_replay(built, "ooco", decode_horizon="auto")
+                for _ in range(2)]
+
+    def test_replay_bit_deterministic_with_horizons(self, auto_runs):
+        (m1, rt1), (m2, rt2) = auto_runs
+        assert m1 == m2
+        assert rt1.finished_signature() == rt2.finished_signature()
+        assert m1["horizon_steps"] > 0      # horizons actually fired
+        assert m1["horizon_rounds"] > 0
+
+    def test_strict_pool_never_runs_horizons(self, auto_runs):
+        _, rt = auto_runs[0]
+        assert all(s.engine.stats.horizon_steps == 0 for s in rt.strict_pool)
+        assert any(s.engine.stats.horizon_steps > 0 for s in rt.relaxed_pool)
+
+    def test_no_throughput_or_slo_loss_vs_single_step(self, built, auto_runs):
+        m_auto, _ = auto_runs[0]
+        m_one, _ = _replay(built, "ooco", decode_horizon=1)
+        assert (m_auto["offline_tokens_per_s"]
+                >= m_one["offline_tokens_per_s"] * (1 - 1e-9))
+        assert (m_auto["online_slo_attainment"]
+                >= m_one["online_slo_attainment"])
+        # fewer host syncs for the same trace: the horizons' whole point
+        assert m_auto["host_syncs"] < m_one["host_syncs"]
+        assert m_one["horizon_steps"] == 0
+
+    def test_chunk_boundary_preemption_unchanged_with_horizons(self, built):
+        """§3.4.1: an online arrival mid-prefill still pauses the offline
+        prefill at the next chunk boundary when horizons are active on the
+        relaxed pool — and still re-runs no layer."""
+        cfg, model, params, donor = built
+        rt = PoolRuntime(cfg, policy="ooco", n_strict=1, n_relaxed=1,
+                         clock=VirtualClock(), backend="ref", num_pages=128,
+                         page_size=8, slo_ttft=SLO_TTFT, slo_tpot=SLO_TPOT,
+                         hw=replay_hw(), seed=0, model=model, params=params,
+                         chunk_tokens=8, decode_horizon="auto",
+                         kernels_from=donor[0])
+        offline = [tr.TraceRequest(0.0, 48, 4)]
+        online = [tr.TraceRequest(0.005, 16, 4)]   # mid-prefill arrival
+        m = rt.run(online, offline, duration=2.0, max_prompt=48, max_output=4)
+        assert m["chunk_preemptions"] >= 1
+        assert m["online_finished"] == 1 and m["offline_finished"] == 1
+        assert m["recompute_tokens"] == 0
