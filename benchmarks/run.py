@@ -146,8 +146,9 @@ def bench_decode_hotpath(quick=False, gate=False):
          f"pool_copies={h['horizon_full_pool_copies']}")
 
 
-def bench_colocation(quick=False):
-    from benchmarks.bench_colocation import (run_colocation,
+def bench_colocation(quick=False, gate=False):
+    from benchmarks.bench_colocation import (run_chaos_replay,
+                                             run_colocation,
                                              run_runtime_policy_comparison,
                                              summarize)
     # real pool-runtime replay (virtual clock, deterministic) — the policy
@@ -164,6 +165,21 @@ def bench_colocation(quick=False):
          f"{pol['online_priority']['offline_tokens_per_s']:.0f}/"
          f"{pol['ooco']['offline_tokens_per_s']:.0f} "
          f"ooco_vs_op={rt['ooco_vs_online_priority_offline_tput']}x")
+    # chaos replay: one relaxed engine crashed mid-trace via deterministic
+    # fault injection — online SLO attainment must hold at 100% and the
+    # offline throughput loss must be reported, never silent
+    t0 = time.perf_counter()
+    ch = run_chaos_replay(quick=quick, verbose=not quick)
+    crun = ch["runs"]["chaos"]
+    bad = gate and (crun["online_slo_attainment"] < 1.0
+                    or crun["engine_crashes"] != 1)
+    _row("fig6_chaos_replay", (time.perf_counter() - t0) * 1e6,
+         ("ERROR online SLO lost under relaxed-engine crash: " if bad else "")
+         + f"attain={crun['online_slo_attainment']:.2f} "
+         f"crashes={crun['engine_crashes']} "
+         f"recoveries={crun['recoveries']} "
+         f"offline_tput_loss={ch['offline_tput_loss']:.2f} "
+         f"plan={ch['fault_plan']}")
     t0 = time.perf_counter()
     datasets = ("ooc",) if quick else ("ooc", "azure_conv", "azure_code")
     results = run_colocation(duration=120 if quick else 180,
@@ -240,7 +256,8 @@ def main() -> int:
         if args.only and args.only != name:
             continue
         kw = ({"gate": args.gate}
-              if name in ("engine_throughput", "decode_hotpath") else {})
+              if name in ("engine_throughput", "decode_hotpath",
+                          "colocation") else {})
         try:
             fn(quick=args.quick, **kw)
         except Exception as e:  # keep the harness running

@@ -24,6 +24,16 @@ Clocking is pluggable:
 Pools execute in parallel in a real deployment, so a virtual round advances
 by the *maximum* modeled cost across engines; each engine's actions within
 a round (prefill, then decode) are serialized and their costs summed.
+
+Fault tolerance (``cluster.faults``): a seeded ``FaultPlan`` can crash
+engines, wedge dispatches, leak pool pages, and fail/corrupt KV transfers —
+all deterministically, so chaos replays are bit-reproducible. Crashed
+engines' in-flight requests are re-admitted from the frontend prompt log
+through the recompute path (greedy streams regenerate bit-identical
+tokens); a crashed strict engine promotes a drained relaxed engine; KV
+migration retries with seeded backoff and falls back to recompute; and
+under overload, admission control defers (optionally sheds) offline work
+first so online SLO attainment decays last.
 """
 from __future__ import annotations
 
@@ -34,12 +44,14 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
+from repro.cluster.faults import FaultInjector, FaultPlan
 from repro.core import scheduling as sch
 from repro.core.hardware import cpu_measured
 from repro.core.perf_model import HardwareParams, PerfModel
 from repro.core.request import Kind, Phase, Request
 from repro.data.traces import TraceRequest
 from repro.engine.engine import ServingEngine
+from repro.engine.kv_cache import TransferIntegrityError
 from repro.models.model import build_model
 
 POLICIES = ("base_pd", "online_priority", "ooco")
@@ -153,10 +165,66 @@ class Metrics:
     chunks: int = 0                # prefill chunks executed (fused rounds)
     chunk_preemptions: int = 0     # §3.4.1 pauses at chunk boundaries
     horizon_rounds: int = 0        # rounds dispatched as K>1 decode horizons
+    engine_crashes: int = 0        # fault injection: engines lost
+    promotions: int = 0            # relaxed->strict failover promotions
+    recoveries: int = 0            # requests re-admitted after a crash
+    migration_retries: int = 0     # failed KV-transfer attempts retried
+    migration_recomputes: int = 0  # transfers that fell back to recompute
+    watchdog_aborts: int = 0       # stuck dispatches killed by the watchdog
+    shed_requests: int = 0         # offline work shed under bounded backlog
+    degraded_rounds: int = 0       # rounds run under overload admission
 
 
 def _pct(xs: list[float], q: float) -> float | None:
     return float(np.percentile(xs, q)) if xs else None
+
+
+def _validate_runtime_args(*, policy, n_strict, n_relaxed, slo_ttft, slo_tpot,
+                           num_pages, page_size, decode_horizon, max_horizon,
+                           chunk_tokens, max_transfer_attempts,
+                           max_offline_backlog) -> None:
+    """Constructor-time validation: reject impossible topologies, SLOs, and
+    scheduling knobs with actionable ``ValueError``s instead of the index/
+    shape errors they would otherwise become deep inside a replay."""
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; "
+                         f"expected one of {POLICIES}")
+    if n_strict + n_relaxed <= 0:
+        raise ValueError("PoolRuntime needs at least one engine "
+                         f"(n_strict={n_strict}, n_relaxed={n_relaxed})")
+    if n_strict < 1 or n_relaxed < 1:
+        raise ValueError(
+            "PoolRuntime needs >= 1 strict and >= 1 relaxed engine (got "
+            f"n_strict={n_strict}, n_relaxed={n_relaxed}): the strict pool "
+            "serves online decode, the relaxed pool runs prefill. Pools "
+            "may still shrink to zero at runtime via fault injection.")
+    if slo_ttft <= 0 or slo_tpot <= 0:
+        raise ValueError("SLOs must be positive seconds "
+                         f"(slo_ttft={slo_ttft}, slo_tpot={slo_tpot})")
+    if num_pages < 2 or page_size < 1:
+        raise ValueError("KV pool needs num_pages >= 2 (page 0 is reserved) "
+                         f"and page_size >= 1 (got num_pages={num_pages}, "
+                         f"page_size={page_size})")
+    if max_horizon < 1:
+        raise ValueError(f"max_horizon must be >= 1 (got {max_horizon})")
+    for knob, val in (("decode_horizon", decode_horizon),
+                      ("chunk_tokens", chunk_tokens)):
+        if val in (None, "auto"):
+            continue
+        try:
+            n = int(val)
+        except (TypeError, ValueError):
+            raise ValueError(f"{knob} must be an int >= 0, 'auto', or None "
+                             f"(got {val!r})") from None
+        if n < 0:
+            raise ValueError(f"{knob} must be >= 0 (got {val!r}; "
+                             "0/None disables the feature)")
+    if max_transfer_attempts < 1:
+        raise ValueError("max_transfer_attempts must be >= 1 "
+                         f"(got {max_transfer_attempts})")
+    if max_offline_backlog is not None and max_offline_backlog < 0:
+        raise ValueError("max_offline_backlog must be None or >= 0 "
+                         f"(got {max_offline_backlog})")
 
 
 class PoolRuntime:
@@ -173,10 +241,20 @@ class PoolRuntime:
                  chunk_tokens: int | str | None = "auto",
                  decode_horizon: int | str | None = 1,
                  max_horizon: int = 16,
+                 fault_plan=None, chaos_seed: int = 0,
+                 max_transfer_attempts: int = 3,
+                 backoff_base: float = 0.05,
+                 watchdog_mult: float = 10.0,
+                 max_offline_backlog: int | None = None,
                  model=None, params=None,
                  kernels_from: ServingEngine | None = None):
-        assert policy in POLICIES, policy
-        assert n_strict >= 1 and n_relaxed >= 1
+        _validate_runtime_args(
+            policy=policy, n_strict=n_strict, n_relaxed=n_relaxed,
+            slo_ttft=slo_ttft, slo_tpot=slo_tpot, num_pages=num_pages,
+            page_size=page_size, decode_horizon=decode_horizon,
+            max_horizon=max_horizon, chunk_tokens=chunk_tokens,
+            max_transfer_attempts=max_transfer_attempts,
+            max_offline_backlog=max_offline_backlog)
         self.cfg = cfg
         self.policy = policy
         # chunked-prefill token budget: "auto" = roofline-suggested per
@@ -240,12 +318,29 @@ class PoolRuntime:
         # wall-mode live-arrival probe for §3.4.1 (run() wires the trace feed)
         self.incoming_online = lambda: False
         self._next_online_arrival = lambda: None
+        # ---- fault tolerance (chaos replay) ----
+        plan = FaultPlan.parse(fault_plan)
+        self.injector = (FaultInjector(plan, chaos_seed)
+                         if plan is not None and plan.events else None)
+        self.chaos_seed = chaos_seed
+        self.max_transfer_attempts = max_transfer_attempts
+        self.backoff_base = backoff_base
+        self.watchdog_mult = watchdog_mult
+        self.max_offline_backlog = max_offline_backlog
+        # frontend request log: prompts survive engine crashes, so recovery
+        # re-admits from here instead of reading dead-engine memory
+        self.prompts: dict[int, list[int]] = {}
+        self.shed: list[Request] = []
+        self.dead_pool: list[EngineSlot] = []
+        self._page_leases: list[tuple[EngineSlot, list[int], float]] = []
+        self._admission = "admit"
 
     # ------------------------------------------------------------------
     # submission + one co-located round
     # ------------------------------------------------------------------
     def submit(self, req: Request, tokens: list[int]) -> None:
         self.all_requests.append(req)
+        self.prompts[req.rid] = list(tokens)
         if req.kind == Kind.ONLINE:
             self.online_queue.append((req, tokens))
         else:
@@ -256,15 +351,172 @@ class PoolRuntime:
         engine did work; virtual mode advances the clock by the modeled
         round duration (max across engines — pools run in parallel)."""
         now = self.clock.now()
+        self._apply_faults(now)
+        self._admission = self._admission_state()
+        if self._admission != "admit":
+            self.metrics.degraded_rounds += 1
+            if self._admission == "shed":
+                self._shed_offline()
         self._retry_placements()
         costs = [self._relaxed_round(slot, now) for slot in self.relaxed_pool]
         costs += [self._strict_round(slot, now) for slot in self.strict_pool]
         self.metrics.rounds += 1
-        cost = max(costs)
+        cost = max(costs, default=0.0)  # pools can crash away entirely
         if cost > 0:
             self.clock.advance(cost)
             return True
         return False
+
+    # ------------------------------------------------------------------
+    # fault injection + recovery (chaos replay)
+    # ------------------------------------------------------------------
+    def _slot_named(self, name: str) -> EngineSlot | None:
+        for s in self.strict_pool + self.relaxed_pool:
+            if s.name == name:
+                return s
+        return None
+
+    def _apply_faults(self, now: float) -> None:
+        """Round-boundary fault dispatch: crash engines, leak (and later
+        restore) pool pages. Every decision comes from the seeded plan, so
+        a chaos replay is exactly as deterministic as a clean one."""
+        for lease in list(self._page_leases):
+            slot, pages, until = lease
+            if now >= until:
+                self._page_leases.remove(lease)
+                if slot.engine.alive:
+                    slot.engine.cache.allocator.free(pages)
+        if self.injector is None:
+            return
+        for name in self.injector.crashes_due(now):
+            slot = self._slot_named(name)
+            if slot is not None:
+                self._crash_engine(slot)
+        for ev in self.injector.leaks_due(now):
+            slot = self._slot_named(ev.engine)
+            if slot is None:
+                continue
+            alloc = slot.engine.cache.allocator
+            pages = alloc.alloc(min(ev.pages, alloc.free_pages))
+            if ev.duration > 0:
+                self._page_leases.append((slot, pages, now + ev.duration))
+
+    def _crash_engine(self, slot: EngineSlot) -> None:
+        """Engine-process crash: device KV and host bookkeeping are gone.
+        Every in-flight request is re-admitted from the frontend prompt log
+        through the recompute path — greedy streams regenerate bit-identical
+        tokens, so recovery preserves token parity. A crashed strict engine
+        additionally promotes a drained relaxed engine so online traffic
+        never loses its pool."""
+        lost: dict[int, Request] = {}
+        for r in slot.online + slot.offline:
+            if not r.done:
+                lost[r.rid] = r
+        for entry in slot.prefilling:
+            if not entry[0].done:
+                lost[entry[0].rid] = entry[0]
+        for entry in list(self.place_queue):
+            if entry[1] is slot:
+                self.place_queue.remove(entry)
+                if not entry[0].done:
+                    lost[entry[0].rid] = entry[0]
+        for entry in list(self.offline_queue):
+            if entry[2] is slot:       # home-pinned resume: state is gone
+                self.offline_queue.remove(entry)
+                if not entry[0].done:
+                    lost[entry[0].rid] = entry[0]
+        slot.engine.crash()
+        slot.online.clear()
+        slot.offline.clear()
+        slot.prefilling.clear()
+        pool = self.strict_pool if slot.role == "strict" else self.relaxed_pool
+        pool.remove(slot)
+        self.dead_pool.append(slot)
+        self.metrics.engine_crashes += 1
+        if slot.role == "strict":
+            self._promote_relaxed()
+        for r in sorted(lost.values(), key=lambda r: (r.arrival, r.rid)):
+            self._readmit(r)
+            self.metrics.recoveries += 1
+
+    def _readmit(self, req: Request) -> None:
+        """Requeue a request whose engine-side state is gone (crash, or
+        exhausted migration retries): reset progress, charge the recompute
+        waste, keep SLO-relevant timestamps. Greedy decoding is batch- and
+        chunk-independent (the invariant the eviction path already relies
+        on), so the regenerated stream is bit-identical to the lost one."""
+        if req.generated > 0:
+            req.recompute_tokens += req.context_len
+        elif req.prefill_tokens_done > 0:
+            req.recompute_tokens += req.prefill_tokens_done
+        elif req.prefill_layers_done > 0:
+            req.recompute_tokens += req.prompt_len
+        req.generated = 0
+        req.prefill_layers_done = 0
+        req.prefill_tokens_done = 0
+        req.phase = Phase.QUEUED
+        toks = self.prompts[req.rid]
+        if req.kind == Kind.ONLINE:
+            self.online_queue.append((req, toks))
+            self.online_queue.sort(key=lambda e: (e[0].arrival, e[0].rid))
+        else:
+            self.offline_queue.append((req, toks, None))
+
+    def _promote_relaxed(self) -> None:
+        """Strict failover: flip the most-drained relaxed engine to the
+        strict role. Its decoding residents and landed KV move with it;
+        in-flight prefills are aborted back to the queues (recompute),
+        because strict rounds only run the prefill path once the relaxed
+        pool is empty."""
+        if not self.relaxed_pool:
+            return
+        slot = min(self.relaxed_pool,
+                   key=lambda s: (sum(s.engine.cache.lengths.values()),
+                                  s.name))
+        self.relaxed_pool.remove(slot)
+        for entry in list(slot.prefilling):
+            self._abort_chunk_prefill(slot, entry)
+        for idx, entry in enumerate(self.offline_queue):
+            req, toks, home = entry
+            if home is slot:           # layer-partial resume: unpin it
+                slot.engine.abort_prefill(req.rid)
+                slot.engine.requests.pop(req.rid, None)
+                slot.engine.token_buf.pop(req.rid, None)
+                self.offline_queue[idx] = (req, toks, None)
+        slot.role = "strict"
+        self.strict_pool.append(slot)
+        self.metrics.promotions += 1
+
+    def _admission_state(self) -> str:
+        """Per-round graceful-degradation decision (``core.scheduling``):
+        under overload, fresh offline admission stops first ("defer");
+        only with ``max_offline_backlog`` configured is excess offline
+        queue shed. Online work is never deferred or shed."""
+        pools = self.relaxed_pool or self.strict_pool
+        free = min((s.engine.cache.allocator.free_pages
+                    / s.engine.cache.num_pages for s in pools), default=0.0)
+        return sch.admission_decision(
+            queued_online=len(self.online_queue),
+            strict_pressure=max((s.pressure for s in self.strict_pool),
+                                default=0.0),
+            offline_backlog=len(self.offline_queue),
+            free_page_frac=free,
+            max_backlog=self.max_offline_backlog)
+
+    def _shed_offline(self) -> None:
+        """Shed the newest fresh offline entries beyond the bounded
+        backlog. Sheds are surfaced (``summary()['shed_requests']``,
+        ``self.shed``) — never silent."""
+        excess = len(self.offline_queue) - (self.max_offline_backlog or 0)
+        for i in range(len(self.offline_queue) - 1, -1, -1):
+            if excess <= 0:
+                break
+            if self.offline_queue[i][2] is not None:
+                continue               # pinned resumes hold pages; keep them
+            req, _, _ = self.offline_queue.pop(i)
+            self.shed.append(req)
+            self.metrics.shed_requests += 1
+            excess -= 1
 
     # ------------------------------------------------------------------
     # relaxed pool: prefill (layer-interruptible) + offline decode
@@ -518,6 +770,10 @@ class PoolRuntime:
             req, toks, home = entry
             if home is not None and home is not slot:
                 continue
+            if home is None and self._admission != "admit":
+                # degraded round: fresh offline work stays queued; pinned
+                # resumes keep going (finishing them frees pages)
+                continue
             scanned += 1
             if scanned > 4:
                 break
@@ -572,8 +828,13 @@ class PoolRuntime:
     def _place_on_strict(self, req: Request, src: EngineSlot) -> float:
         """Push a prefilled request to the strict pool (most free KV pages
         wins), evicting offline victims on the destination if needed. If no
-        strict engine can hold it even after eviction, it decodes in place
+        strict engine can hold it even after eviction — or the source IS a
+        strict engine (degraded mode after failover) — it decodes in place
         on the source engine (never dropped)."""
+        if not self.strict_pool or src in self.strict_pool:
+            (src.online if req.kind == Kind.ONLINE
+             else src.offline).append(req)
+            return 0.0
         n = src.engine.cache.lengths[req.rid]
         dst = max(self.strict_pool,
                   key=lambda s: s.engine.cache.allocator.free_pages)
@@ -593,6 +854,8 @@ class PoolRuntime:
 
     def _retry_placements(self) -> None:
         """Drain parked offline placements as strict capacity frees up."""
+        if not self.strict_pool:
+            return
         for entry in list(self.place_queue):
             req, src = entry
             if req.done:
@@ -605,19 +868,62 @@ class PoolRuntime:
                 self._migrate(req, src, dst)
 
     def _migrate(self, req: Request, src: EngineSlot, dst: EngineSlot) -> float:
-        """Real KV movement between engines (RDMA->ICI analogue): gather the
-        request's pages out of the source pool, scatter into freshly
-        allocated pages on the destination."""
-        k, v, n = src.engine.migrate_out(req.rid)
-        dst.engine.migrate_in(req.rid, req, src.engine.token_buf[req.rid],
-                              k, v, n,
-                              sampling=src.engine.req_sampling.pop(req.rid, None))
-        src.engine.requests.pop(req.rid, None)
-        src.engine.token_buf.pop(req.rid, None)
-        (dst.online if req.kind == Kind.ONLINE else dst.offline).append(req)
-        self.metrics.migrations += 1
-        return self.pm.migration_seconds(req.context_len) \
-            if self.clock.virtual else 0.0
+        """Real KV movement between engines (RDMA->ICI analogue), retry-
+        safe: the payload is exported with an integrity checksum while the
+        source keeps its pages; each attempt may be failed or corrupted by
+        the fault injector; failures retry with seeded exponential backoff
+        charged to the virtual clock; and when the attempt budget is
+        exhausted the request falls back to the recompute path (re-admitted
+        from the prompt log) instead of being lost mid-transfer."""
+        eng = src.engine
+        k, v, n, checksum = eng.export_for_transfer(req.rid)
+        per_attempt = (self.pm.migration_seconds(req.context_len)
+                       if self.clock.virtual else 0.0)
+        cost = 0.0
+        for attempt in range(1, self.max_transfer_attempts + 1):
+            outcome = ("ok" if self.injector is None
+                       else self.injector.transfer_outcome(self.clock.now()))
+            cost += per_attempt
+            if outcome == "ok":
+                dst.engine.migrate_in(
+                    req.rid, req, eng.token_buf[req.rid], k, v, n,
+                    sampling=eng.req_sampling.pop(req.rid, None),
+                    checksum=checksum)
+                eng.commit_transfer_out(req.rid)
+                (dst.online if req.kind == Kind.ONLINE
+                 else dst.offline).append(req)
+                self.metrics.migrations += 1
+                return cost
+            if outcome == "corrupt":
+                # payload arrives bit-flipped: the destination checksum
+                # rejects it before any state lands, so the intact source
+                # copy simply re-sends
+                bad = np.array(k, copy=True)
+                bad.flat[0] = abs(bad.flat[0]) + 1.0
+                try:
+                    dst.engine.migrate_in(
+                        req.rid, req, eng.token_buf[req.rid], bad, v, n,
+                        sampling=eng.req_sampling.get(req.rid),
+                        checksum=checksum)
+                    raise AssertionError("corrupt transfer went undetected")
+                except TransferIntegrityError:
+                    pass
+            self.metrics.migration_retries += 1
+            if attempt < self.max_transfer_attempts:
+                delay = self.injector.backoff_seconds(
+                    attempt, self.backoff_base)
+                if self.clock.virtual:
+                    cost += delay
+        # attempt budget exhausted: recompute fallback — release the source
+        # copy and re-admit from the frontend prompt log (greedy replay
+        # regenerates the same tokens; waste lands in recompute_tokens)
+        eng.cache.free(req.rid)
+        eng.requests.pop(req.rid, None)
+        eng.token_buf.pop(req.rid, None)
+        eng.req_sampling.pop(req.rid, None)
+        self.metrics.migration_recomputes += 1
+        self._readmit(req)
+        return cost
 
     def _evict_from(self, slot: EngineSlot, need_tokens: float,
                     exclude: set[int] | None = None) -> None:
@@ -653,8 +959,19 @@ class PoolRuntime:
     # decode rounds
     # ------------------------------------------------------------------
     def _strict_round(self, slot: EngineSlot, now: float) -> float:
-        cost, batch = self._decode_slot(slot, now, relaxed=False,
-                                        want_batch=True)
+        self._push_cost = 0.0
+        pf = None
+        pre = 0.0
+        if not self.relaxed_pool:
+            # total relaxed-pool loss (crashes/promotions): strict engines
+            # take over prefill so the cluster degrades instead of wedging
+            if self.chunked:
+                pf = self._pick_chunk_prefill(slot)
+            else:
+                pre = self._prefill_one(slot, now)
+        cost, batch = self._decode_slot(slot, now + pre, relaxed=False,
+                                        want_batch=True, prefill=pf)
+        cost += pre
         if self.policy == "ooco" and batch:
             pull = self._pull_migration(slot, batch)
             # the pull's KV transfer rides the interconnect while the next
@@ -662,7 +979,7 @@ class PoolRuntime:
             # max(compute, transfer), not the sum (same overlap the
             # simulator models; deterministic — both terms are modeled)
             cost = max(cost, pull)
-        return cost
+        return max(cost, self._push_cost)
 
     def _effective_slo(self, online, offline) -> float:
         """ooco mix-decoding SLO bound. Virtual mode: the perf model IS the
@@ -756,8 +1073,17 @@ class PoolRuntime:
             batch = self._fit_batch(slot, plan.decode)
             chunk = plan.chunk_tokens if plan.prefill is not None else 0
             if chunk:
+                # the decode batch's incremental pages are not allocated yet
+                # (that happens inside the fused dispatch, AFTER the chunk's
+                # scatter claims its pages) — reserve them here or the chunk
+                # can starve the decode rows into OutOfPagesError
+                cache = slot.engine.cache
+                reserved = sum(
+                    cache.pages_for(r.context_len)
+                    - len(cache.tables.get(r.rid, [])) for r in batch)
                 chunk = self._fit_chunk(slot, pf_req, chunk,
-                                        exclude={r.rid for r in batch})
+                                        exclude={r.rid for r in batch},
+                                        reserved_pages=reserved)
             allowance = plan.horizon
         else:
             batch = self._fit_batch(slot, self._select_batch(slot, relaxed))
@@ -785,6 +1111,16 @@ class PoolRuntime:
             est = self.pm.horizon_estimate(dec_ctx, horizon)
         else:
             est = self.pm.decode_estimate(dec_ctx)
+        if (self.injector is not None
+                and self.injector.dispatch_stuck(slot.name, now)):
+            # injected wedge: the dispatch would never return; the watchdog
+            # kills it once the round exceeds watchdog_mult x the roofline-
+            # predicted latency, and the round retries from intact state
+            # (nothing was committed, so token parity is untouched)
+            self.metrics.watchdog_aborts += 1
+            cost = (est.latency * self.watchdog_mult
+                    if self.clock.virtual else 0.0)
+            return (cost, []) if want_batch else cost
         slot.last_bottleneck = est.bottleneck
         if not relaxed:
             online_lat = (self.pm.decode_estimate(
@@ -839,21 +1175,26 @@ class PoolRuntime:
             self.offline_queue.append((req, toks, None))
 
     def _fit_chunk(self, slot: EngineSlot, req: Request, chunk: int,
-                   exclude: set[int]) -> int:
+                   exclude: set[int], reserved_pages: int = 0) -> int:
         """Page-budget admission for the round's prefill chunk: shrink it to
-        the KV capacity left after the decode batch's reservations (online
-        prefills may evict offline residents first). A zero here just defers
-        the chunk — the landed prefix stays pinned and resumes later."""
+        the KV capacity left after the decode batch's reservations
+        (``reserved_pages``, claimed inside the dispatch after the chunk's
+        scatter; online prefills may evict offline residents first). A zero
+        here just defers the chunk — the landed prefix stays pinned and
+        resumes later."""
         cache = slot.engine.cache
         done = req.prefill_tokens_done
         slack = len(cache.tables.get(req.rid, [])) * cache.page_size - done
-        free_tok = cache.allocator.free_pages * cache.page_size + max(slack, 0)
-        if req.kind == Kind.ONLINE and chunk > free_tok:
-            self._evict_from(slot, chunk - free_tok,
-                             exclude=exclude | {req.rid})
-            free_tok = (cache.allocator.free_pages * cache.page_size
-                        + max(slack, 0))
-        return min(chunk, free_tok)
+
+        def free_tok() -> int:
+            free = cache.allocator.free_pages - reserved_pages
+            return max(free, 0) * cache.page_size + max(slack, 0)
+
+        avail = free_tok()
+        if req.kind == Kind.ONLINE and chunk > avail:
+            self._evict_from(slot, chunk - avail, exclude=exclude | {req.rid})
+            avail = free_tok()
+        return min(chunk, avail)
 
     def _pull_migration(self, slot: EngineSlot, batch: list[Request]) -> float:
         """§3.4.3 pull-model migration: a strict engine with SLO headroom
@@ -961,9 +1302,10 @@ class PoolRuntime:
         off_tokens = int(sum(r.generated for r in offline))
         # §3.4.1 preemptions: layer-level interruptions (legacy path) plus
         # chunk-boundary pauses of in-progress offline prefills
-        preempt = (sum(s.engine.stats.preemptions for s in self.relaxed_pool)
+        preempt = (sum(s.engine.stats.preemptions
+                       for s in self.relaxed_pool + self.dead_pool)
                    + self.metrics.chunk_preemptions)
-        pools = self.strict_pool + self.relaxed_pool
+        pools = self.strict_pool + self.relaxed_pool + self.dead_pool
         return {
             "policy": self.policy,
             "n_strict": len(self.strict_pool),
@@ -999,6 +1341,18 @@ class PoolRuntime:
             "evictions": self.metrics.evictions,
             "rounds": self.metrics.rounds,
             "idle_rounds": self.metrics.idle_rounds,
+            # fault-tolerance counters: nonzero only under injected chaos
+            # or genuine overload; shed work is surfaced here, never silent
+            "faults_injected": (self.injector.faults_injected
+                                if self.injector else 0),
+            "engine_crashes": self.metrics.engine_crashes,
+            "promotions": self.metrics.promotions,
+            "recoveries": self.metrics.recoveries,
+            "migration_retries": self.metrics.migration_retries,
+            "migration_recomputes": self.metrics.migration_recomputes,
+            "watchdog_aborts": self.metrics.watchdog_aborts,
+            "shed_requests": self.metrics.shed_requests,
+            "degraded_rounds": self.metrics.degraded_rounds,
         }
 
     def finished_signature(self) -> list[tuple]:

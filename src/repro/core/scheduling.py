@@ -351,6 +351,45 @@ def select_eviction_victims(
 
 
 # ---------------------------------------------------------------------------
+# Graceful degradation — overload admission control (offline sheds first)
+# ---------------------------------------------------------------------------
+
+def admission_decision(
+    *,
+    queued_online: int,
+    strict_pressure: float,
+    offline_backlog: int,
+    free_page_frac: float = 1.0,
+    max_backlog: int | None = None,
+    pressure_high: float = 0.95,
+    queue_high: int = 8,
+    free_low: float = 0.02,
+) -> str:
+    """Overload gate for admitting NEW offline work: ``"admit"`` |
+    ``"defer"`` | ``"shed"``.
+
+    The degradation order is the point (HyGen/ConServe: SLO guarantees must
+    hold under adverse conditions): when the cluster is overloaded — a deep
+    online queue, the strict pool's pressure EMA pinned near the SLO with
+    online work still waiting, or the relaxed pool's free pages nearly
+    exhausted — fresh offline prefills stop being admitted (*defer*: they
+    stay queued, costing nothing), so online SLO attainment decays last.
+    Only when the offline backlog itself exceeds ``max_backlog`` (bounded
+    queue — the operator's memory guard) is offline work *shed*, and sheds
+    are always surfaced in ``summary()['shed_requests']``, never silent.
+    Online work is never deferred or shed here. ``max_backlog=None``
+    disables shedding entirely (defer-only degradation, the default)."""
+    overloaded = (queued_online >= queue_high
+                  or (queued_online > 0 and strict_pressure >= pressure_high)
+                  or free_page_frac <= free_low)
+    if not overloaded:
+        return "admit"
+    if max_backlog is not None and offline_backlog > max_backlog:
+        return "shed"
+    return "defer"
+
+
+# ---------------------------------------------------------------------------
 # §3.4.2  Offline Request Gating (cost model)
 # ---------------------------------------------------------------------------
 

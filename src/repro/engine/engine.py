@@ -78,7 +78,11 @@ import numpy as np
 
 from repro.core.perf_model import PerfModel
 from repro.core.request import Phase, Request
-from repro.engine.kv_cache import PagedKVCache
+from repro.engine.kv_cache import PagedKVCache, transfer_checksum, verify_transfer
+
+
+class EngineCrashedError(RuntimeError):
+    """Raised when a dispatch is attempted on a crashed engine."""
 from repro.kernels import backend_flags, resolve_backend
 from repro.kernels.paged_attention.ops import paged_attention
 from repro.models import attention, layers, moe as moe_lib
@@ -258,6 +262,30 @@ class ServingEngine:
                 for i in range(cfg.num_layers)]
         self._base_key = jax.random.PRNGKey(self.sampling.seed)
         self._sample_step = 0
+        self.alive = True
+
+    # ------------------------------------------------------------------
+    # fault surface
+    # ------------------------------------------------------------------
+    def crash(self) -> None:
+        """Simulate an engine-process crash: device KV pools, block tables,
+        and host-side request bookkeeping are all lost. Any further dispatch
+        raises ``EngineCrashedError``. Recovery is the scheduler's job — the
+        pool runtime re-admits every in-flight request from its frontend
+        request log through the recompute path (greedy requests regenerate
+        bit-identical token streams; see ``PoolRuntime._crash_engine``)."""
+        self.alive = False
+        self.requests.clear()
+        self.token_buf.clear()
+        self.partial.clear()
+        self.chunk_state.clear()
+        self.req_sampling.clear()
+        self.cache.tables.clear()
+        self.cache.lengths.clear()
+
+    def _check_alive(self) -> None:
+        if not self.alive:
+            raise EngineCrashedError("engine has crashed; state is gone")
 
     # ------------------------------------------------------------------
     # sampling
@@ -326,6 +354,7 @@ class ServingEngine:
         return self._layer_params_cached[i]
 
     def add_request(self, req: Request, prompt_tokens: list[int]) -> None:
+        self._check_alive()
         assert len(prompt_tokens) == req.prompt_len
         self.requests[req.rid] = req
         self.token_buf[req.rid] = TokenRing(
@@ -341,6 +370,7 @@ class ServingEngine:
                 max_new_pages: bool = True) -> str:
         """Run (or resume) prefill for one request, checking the preemption
         callback between transformer layers. Returns "done" | "preempted"."""
+        self._check_alive()
         t0 = time.perf_counter()
         req = self.requests[rid]
         cfg = self.cfg
@@ -578,6 +608,7 @@ class ServingEngine:
         batches larger than the biggest bucket run as multiple bucket-sized
         chunks (no request is ever silently dropped). Returns rid -> new
         token for every rid passed."""
+        self._check_alive()
         if not rids:
             return {}
         out: dict[int, int] = {}
@@ -685,6 +716,7 @@ class ServingEngine:
         ``max_new_tokens`` mid-horizon stop emitting (masked rows). Batches
         larger than the biggest bucket run as multiple bucket-sized
         horizons. Returns rid -> list of new tokens."""
+        self._check_alive()
         if not rids:
             return {}
         steps = int(steps)
@@ -896,6 +928,7 @@ class ServingEngine:
         chunk-only prefill). Returns rid -> new token for the decode rids;
         chunk progress is visible via ``prefill_progress`` and the request's
         phase flip to DECODING once the prompt completes."""
+        self._check_alive()
         if prefill_rid is None or chunk_tokens <= 0:
             return self.decode_step(decode_rids)
         max_bucket = self.decode_buckets[-1]
@@ -995,8 +1028,29 @@ class ServingEngine:
         self.cache.free(rid)
         return k, v, n
 
+    def export_for_transfer(self, rid: int):
+        """Export KV *without* freeing the source pages, plus an integrity
+        checksum — the retry-safe transfer primitive: the source keeps its
+        state until the destination has verified and imported the payload
+        (``commit_transfer_out`` then releases it)."""
+        k, v, n = self.cache.export_request(rid)
+        return k, v, n, transfer_checksum(k, v)
+
+    def commit_transfer_out(self, rid: int) -> None:
+        """Release a request's local state after a verified transfer."""
+        self.cache.free(rid)
+        self.requests.pop(rid, None)
+        self.token_buf.pop(rid, None)
+
     def migrate_in(self, rid: int, req: Request, tokens, k, v, n: int,
-                   sampling: tuple[float, int] | None = None) -> None:
+                   sampling: tuple[float, int] | None = None,
+                   checksum: float | None = None) -> None:
+        self._check_alive()
+        if checksum is not None:
+            # raises TransferIntegrityError BEFORE any state lands here —
+            # a corrupt payload leaves the destination untouched so the
+            # source can simply re-send
+            verify_transfer(k, v, checksum)
         self.requests[rid] = req
         toks = list(tokens)
         self.token_buf[rid] = TokenRing(

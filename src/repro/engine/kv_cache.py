@@ -29,6 +29,29 @@ class OutOfPagesError(RuntimeError):
     pass
 
 
+class TransferIntegrityError(RuntimeError):
+    """A migrated KV payload failed its checksum at the destination."""
+
+
+def transfer_checksum(k, v) -> float:
+    """Order-independent integrity checksum of a KV transfer payload.
+
+    f64 accumulation over both halves — cheap at page-pool scale, and any
+    single corrupted value moves the sum, which is all the deterministic
+    fault injector's bit-flip model needs. Computed at export, verified at
+    import (``verify_transfer``) BEFORE any destination state changes."""
+    return float(np.abs(np.asarray(k, np.float64)).sum()
+                 + np.abs(np.asarray(v, np.float64)).sum())
+
+
+def verify_transfer(k, v, checksum: float, rtol: float = 1e-9) -> None:
+    got = transfer_checksum(k, v)
+    if abs(got - checksum) > rtol * max(abs(checksum), 1.0):
+        raise TransferIntegrityError(
+            f"KV transfer checksum mismatch: expected {checksum!r}, "
+            f"got {got!r}")
+
+
 @functools.partial(jax.jit, donate_argnums=(0, 1))
 def _scatter_layers(k_pool, v_pool, layer_ids, page_ids, offs, k, v):
     """Scatter S positions of n layers into donated pools in one op.

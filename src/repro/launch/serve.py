@@ -14,12 +14,34 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+import tempfile
 
 from repro.cluster.runtime import (POLICIES, PoolRuntime, VirtualClock,
                                    WallClock, replay_hw)
 from repro.configs import get_config
 from repro.data import traces as tr
+
+
+def write_json_atomic(path: str, blob: str) -> None:
+    """Write via a same-directory temp file + ``os.replace`` so a crash
+    mid-write can never leave a truncated/corrupt metrics file: readers see
+    either the previous complete file or the new complete file."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 class CoLocatedServer(PoolRuntime):
@@ -93,7 +115,25 @@ def main(argv=None):
     ap.add_argument("--max-prompt", type=int, default=64)
     ap.add_argument("--max-output", type=int, default=32)
     ap.add_argument("--metrics-json", default=None,
-                    help="write the metrics summary to this path")
+                    help="write the metrics summary to this path "
+                         "(atomically: temp file + os.replace)")
+    ap.add_argument("--tokens-json", default=None,
+                    help="write the finished-request signature (per-request "
+                         "identity + full token stream) to this path — the "
+                         "chaos-replay CI job byte-diffs it across runs")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic fault injection for chaos replay: "
+                         "a JSON file/list of events or the compact spec "
+                         "'kind[:engine][@t][:k=v...]', comma-separated. "
+                         "Kinds: crash, stuck, page_leak, migration_fail, "
+                         "migration_corrupt, migration_flaky. Example: "
+                         "'crash:relaxed1@3.0,migration_flaky:p=0.25'. "
+                         "Same plan + --chaos-seed => bit-identical metrics "
+                         "and token streams under --virtual-clock")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the fault injector's RNG (flaky-transfer "
+                         "coin flips, retry-backoff jitter); replays with "
+                         "the same seed are bit-reproducible")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
@@ -108,7 +148,9 @@ def main(argv=None):
                           slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot,
                           num_pages=args.num_pages, seed=args.seed,
                           backend=args.backend, hw=hw, chunk_tokens=chunk,
-                          decode_horizon=horizon)
+                          decode_horizon=horizon,
+                          fault_plan=args.fault_plan,
+                          chaos_seed=args.chaos_seed)
     online, offline = build_traces(args, cfg)
     summary = runtime.run(online, offline, duration=args.duration,
                           max_prompt=args.max_prompt,
@@ -116,8 +158,11 @@ def main(argv=None):
     blob = json.dumps(summary, sort_keys=True, indent=2)
     print(blob)
     if args.metrics_json:
-        with open(args.metrics_json, "w") as f:
-            f.write(blob + "\n")
+        write_json_atomic(args.metrics_json, blob + "\n")
+    if args.tokens_json:
+        write_json_atomic(
+            args.tokens_json,
+            json.dumps(runtime.finished_signature()) + "\n")
     return summary
 
 

@@ -1,0 +1,480 @@
+"""Fault-tolerance suite (ISSUE 6): deterministic fault injection, engine
+failover, request recovery, and graceful degradation.
+
+* ``FaultPlan`` parsing (compact spec, JSON, file) and validation;
+* ``PoolRuntime`` constructor validation — clear ``ValueError``s for
+  impossible topologies/SLOs/knobs;
+* chaos replays are bit-deterministic: same plan + chaos seed → identical
+  summaries and token streams;
+* **token parity under recovery**: requests recovered from an injected
+  engine crash (relaxed or strict) emit exactly the fault-free streams;
+* strict-engine crash promotes a relaxed engine (failover);
+* KV-migration retry-with-backoff, corruption detection at the
+  destination checksum, and recompute fallback on retry exhaustion;
+* the watchdog kills injected-stuck dispatches;
+* the full-pool recompute-preemption wedge paths (``_fit_batch`` decode
+  wedge and the pinned-chunk abort) never drop requests;
+* hypothesis properties (skip-safe per tests/conftest.py): injector
+  determinism, and no request is ever silently dropped across
+  abort/re-admit/shed cycles;
+* ``launch.serve``: atomic metrics writes and byte-identical chaos runs.
+"""
+import json
+import os
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.faults import FaultEvent, FaultInjector, FaultPlan
+from repro.cluster.runtime import PoolRuntime, VirtualClock, replay_hw
+from repro.configs import get_config
+from repro.core import scheduling as sch
+from repro.core.request import Kind, Request
+from repro.data import traces as tr
+from repro.engine.engine import EngineCrashedError, ServingEngine
+from repro.engine.kv_cache import (TransferIntegrityError, transfer_checksum,
+                                   verify_transfer)
+from repro.models.model import build_model
+
+SLO_TTFT = 1.0
+SLO_TPOT = 0.030
+
+
+# ---------------------------------------------------------------------------
+# plan parsing + injector (no engines needed)
+# ---------------------------------------------------------------------------
+
+class TestFaultPlanParsing:
+    def test_compact_spec(self):
+        p = FaultPlan.parse("crash:relaxed1@3.0,stuck:relaxed0@2.0,"
+                            "page_leak:strict0@1.5:pages=64:duration=2.0,"
+                            "migration_flaky:p=0.25")
+        kinds = [e.kind for e in p.events]
+        assert kinds == ["crash", "stuck", "page_leak", "migration_flaky"]
+        assert p.events[0].engine == "relaxed1" and p.events[0].at == 3.0
+        assert p.events[2].pages == 64 and p.events[2].duration == 2.0
+        assert p.events[3].p == 0.25
+
+    def test_json_and_file(self, tmp_path):
+        blob = json.dumps([{"kind": "crash", "engine": "relaxed0", "at": 1.0},
+                           {"kind": "migration_fail", "count": 2}])
+        p = FaultPlan.parse(blob)
+        assert [e.kind for e in p.events] == ["crash", "migration_fail"]
+        f = tmp_path / "plan.json"
+        f.write_text(blob)
+        assert FaultPlan.parse(str(f)).events == p.events
+
+    def test_passthrough_and_empty(self):
+        assert FaultPlan.parse(None) is None
+        assert FaultPlan.parse("") is None
+        p = FaultPlan([FaultEvent("migration_fail")])
+        assert FaultPlan.parse(p) is p
+        assert FaultPlan.parse([FaultEvent("migration_fail")]).events
+
+    @pytest.mark.parametrize("bad", [
+        "explode:relaxed0@1.0",            # unknown kind
+        "crash@1.0",                       # crash needs an engine
+        "page_leak:relaxed0:pages=0",      # pages must be > 0
+        "migration_flaky:p=1.5",           # p out of range
+        "crash:relaxed0@-1.0",             # negative time
+    ])
+    def test_invalid_specs_raise(self, bad):
+        with pytest.raises(ValueError):
+            FaultPlan.parse(bad)
+
+    def test_injector_one_shot_and_counters(self):
+        inj = FaultInjector(FaultPlan.parse("crash:relaxed0@2.0"), seed=0)
+        assert inj.crashes_due(1.0) == []
+        assert inj.crashes_due(2.5) == ["relaxed0"]
+        assert inj.crashes_due(3.0) == []          # one-shot
+        assert inj.faults_injected == 1
+
+    def test_planned_failures_drain_before_flaky(self):
+        inj = FaultInjector(
+            FaultPlan.parse("migration_fail:count=2,migration_corrupt"), 3)
+        assert [inj.transfer_outcome(0.0) for _ in range(3)] \
+            == ["fail", "fail", "corrupt"]
+        assert inj.transfer_outcome(0.0) == "ok"   # no flaky event armed
+
+
+class TestAdmissionDecision:
+    def test_admits_when_idle(self):
+        assert sch.admission_decision(queued_online=0, strict_pressure=0.2,
+                                      offline_backlog=50) == "admit"
+
+    def test_defers_on_deep_online_queue(self):
+        assert sch.admission_decision(queued_online=8, strict_pressure=0.0,
+                                      offline_backlog=0) == "defer"
+
+    def test_pressure_only_matters_with_online_waiting(self):
+        assert sch.admission_decision(queued_online=0, strict_pressure=1.0,
+                                      offline_backlog=10) == "admit"
+        assert sch.admission_decision(queued_online=1, strict_pressure=1.0,
+                                      offline_backlog=10) == "defer"
+
+    def test_sheds_only_with_bounded_backlog(self):
+        kw = dict(queued_online=9, strict_pressure=1.0, offline_backlog=100)
+        assert sch.admission_decision(**kw) == "defer"          # unbounded
+        assert sch.admission_decision(**kw, max_backlog=10) == "shed"
+        assert sch.admission_decision(**kw, max_backlog=200) == "defer"
+
+    def test_page_exhaustion_defers(self):
+        assert sch.admission_decision(queued_online=0, strict_pressure=0.0,
+                                      offline_backlog=5,
+                                      free_page_frac=0.0) == "defer"
+
+
+class TestTransferIntegrity:
+    def test_checksum_round_trip_and_corruption(self):
+        import numpy as np
+        k = np.arange(24, dtype=np.float32).reshape(2, 3, 2, 2)
+        v = k + 0.5
+        c = transfer_checksum(k, v)
+        verify_transfer(k, v, c)                    # exact payload passes
+        bad = k.copy()
+        bad.flat[0] += 1.0
+        with pytest.raises(TransferIntegrityError):
+            verify_transfer(bad, v, c)
+
+
+# ---------------------------------------------------------------------------
+# runtime fixtures (real engines, module-scoped model)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def built():
+    cfg = get_config("qwen2.5-7b").reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params, [None]   # last slot: shared kernel donor
+
+
+def _make_rt(built, *, num_pages=256, **kw):
+    cfg, model, params, donor = built
+    kw.setdefault("policy", "ooco")
+    kw.setdefault("n_strict", 1)
+    kw.setdefault("n_relaxed", 2)
+    rt = PoolRuntime(cfg, clock=VirtualClock(), backend="ref",
+                     num_pages=num_pages, page_size=8, slo_ttft=SLO_TTFT,
+                     slo_tpot=SLO_TPOT, hw=replay_hw(), model=model,
+                     params=params, kernels_from=donor[0], **kw)
+    donor[0] = donor[0] or rt.kernel_donor
+    return rt
+
+
+def _replay(built, fault_plan=None, *, duration=6.0, n_offline=40, **kw):
+    """Drained deterministic replay: every request finishes in the clean
+    run, so ``finished_signature`` equality against a chaos run asserts
+    both recovery completeness AND per-request token parity."""
+    rt = _make_rt(built, fault_plan=fault_plan, chaos_seed=7, **kw)
+    online = tr.online_trace("ooc", duration=duration, mean_qps=1.2, seed=0)
+    offline = tr.with_uniform_qps(tr.offline_requests(n_offline, seed=1), 20.0)
+    summary = rt.run(online, offline, duration=duration, max_prompt=48,
+                     max_output=12, drain=True)
+    return summary, rt
+
+
+CHAOS_PLAN = ("crash:relaxed1@2.0,stuck:relaxed0@1.0,"
+              "page_leak:relaxed0@0.5:pages=16:duration=1.5,"
+              "migration_flaky:p=0.3")
+
+
+@pytest.fixture(scope="module")
+def clean_run(built):
+    return _replay(built)
+
+
+@pytest.fixture(scope="module")
+def chaos_runs(built):
+    return _replay(built, CHAOS_PLAN), _replay(built, CHAOS_PLAN)
+
+
+class TestChaosDeterminism:
+    def test_bit_identical_summaries_and_tokens(self, chaos_runs):
+        (m1, rt1), (m2, rt2) = chaos_runs
+        assert m1 == m2
+        assert rt1.finished_signature() == rt2.finished_signature()
+        assert rt1.finished
+
+    def test_faults_actually_fired(self, chaos_runs):
+        (m, _), _ = chaos_runs
+        assert m["engine_crashes"] == 1
+        assert m["watchdog_aborts"] == 1
+        assert m["faults_injected"] >= 3
+        assert m["recoveries"] >= 1
+        assert m["n_relaxed"] == 1          # one relaxed engine is gone
+
+
+class TestRecoveryTokenParity:
+    def test_relaxed_crash_token_parity(self, clean_run, chaos_runs):
+        """Every request recovered from the crashed relaxed engine emits
+        exactly the fault-free stream (drain mode: both runs finish the
+        whole trace, so signature equality is full per-request parity)."""
+        _, rt_clean = clean_run
+        (m, rt_chaos), _ = chaos_runs
+        assert rt_chaos.finished_signature() == rt_clean.finished_signature()
+        assert m["recompute_tokens"] > 0    # recovery really recomputed
+
+    def test_online_slo_survives_relaxed_crash(self, chaos_runs):
+        (m, _), _ = chaos_runs
+        assert m["online_slo_attainment"] == 1.0
+        assert m["online_finished"] == m["online_requests"]
+
+    def test_strict_crash_promotes_and_preserves_parity(self, built,
+                                                        clean_run):
+        _, rt_clean = clean_run
+        m, rt = _replay(built, "crash:strict0@2.0")
+        assert m["engine_crashes"] == 1
+        assert m["promotions"] == 1
+        assert m["n_strict"] == 1           # promoted replacement in place
+        assert m["n_relaxed"] == 1
+        assert rt.finished_signature() == rt_clean.finished_signature()
+
+
+class TestMigrationRetry:
+    def test_planned_failures_retry_then_succeed(self, built, clean_run):
+        _, rt_clean = clean_run
+        m, rt = _replay(built, "migration_fail:count=2")
+        assert m["migration_retries"] >= 2
+        assert m["migration_recomputes"] == 0   # budget (3) never exhausted
+        assert m["migrations"] > 0
+        assert rt.finished_signature() == rt_clean.finished_signature()
+
+    def test_corruption_detected_and_retried(self, built, clean_run):
+        _, rt_clean = clean_run
+        m, rt = _replay(built, "migration_corrupt:count=1")
+        assert m["migration_retries"] >= 1
+        assert rt.finished_signature() == rt_clean.finished_signature()
+
+    def test_retry_exhaustion_falls_back_to_recompute(self, built,
+                                                      clean_run):
+        _, rt_clean = clean_run
+        m, rt = _replay(built, "migration_fail:count=3")   # = attempt budget
+        assert m["migration_recomputes"] >= 1
+        assert m["migration_retries"] >= 3
+        # the recomputed request is not lost — full drain still matches
+        assert rt.finished_signature() == rt_clean.finished_signature()
+
+
+class TestConstructorValidation:
+    @pytest.mark.parametrize("kw,match", [
+        (dict(policy="bogus"), "unknown policy"),
+        (dict(n_strict=0), "strict"),
+        (dict(n_relaxed=0), "relaxed"),
+        (dict(slo_ttft=-1.0), "SLO"),
+        (dict(slo_tpot=0.0), "SLO"),
+        (dict(num_pages=1), "num_pages"),
+        (dict(page_size=0), "page_size"),
+        (dict(decode_horizon=-3), "decode_horizon"),
+        (dict(decode_horizon="fast"), "decode_horizon"),
+        (dict(chunk_tokens=-5), "chunk_tokens"),
+        (dict(max_horizon=0), "max_horizon"),
+        (dict(max_transfer_attempts=0), "max_transfer_attempts"),
+        (dict(max_offline_backlog=-1), "max_offline_backlog"),
+    ])
+    def test_bad_args_raise_clear_valueerrors(self, built, kw, match):
+        cfg = built[0]
+        with pytest.raises(ValueError, match=match):
+            PoolRuntime(cfg, **kw)          # raises before engines build
+
+
+class TestEngineCrash:
+    def test_crashed_engine_refuses_dispatch(self, built):
+        cfg, model, params, donor = built
+        eng = ServingEngine(model, params, num_pages=32, page_size=8,
+                            backend="ref", kernels_from=donor[0])
+        donor[0] = donor[0] or eng
+        req = Request(Kind.OFFLINE, 0.0, 8, 4)
+        eng.add_request(req, [1] * 8)
+        eng.prefill(req.rid)
+        eng.crash()
+        assert not eng.alive
+        assert not eng.requests and not eng.cache.tables
+        with pytest.raises(EngineCrashedError):
+            eng.decode_step([req.rid])
+        with pytest.raises(EngineCrashedError):
+            eng.add_request(Request(Kind.OFFLINE, 0.0, 8, 4), [1] * 8)
+
+
+# ---------------------------------------------------------------------------
+# full-pool recompute-preemption wedge paths (satellite c)
+# ---------------------------------------------------------------------------
+
+class TestFullPoolWedge:
+    def _resident(self, rt, slot, prompt_len=64, output_len=300):
+        req = Request(Kind.OFFLINE, 0.0, prompt_len, output_len)
+        toks = [1] * prompt_len
+        rt.submit(req, toks)
+        rt.offline_queue.clear()             # place it by hand
+        slot.engine.add_request(req, toks)
+        slot.engine.prefill(req.rid)
+        slot.offline.append(req)
+        return req
+
+    def test_fit_batch_wedge_evicts_to_unblock_head(self, built):
+        """A full pool where no decode row fits must evict other offline
+        residents to unblock the head request — and the victims land back
+        in the offline queue (recompute later), never dropped."""
+        rt = _make_rt(built, num_pages=64)
+        slot = rt.relaxed_pool[0]
+        reqs = [self._resident(rt, slot) for _ in range(7)]
+        cache = slot.engine.cache
+        free = cache.allocator.free_pages
+        for r in reqs:   # claim growth exactly one page beyond free space
+            r.generated = (free + 1) * cache.page_size
+        batch = rt._fit_batch(slot, list(reqs))
+        assert batch == [reqs[0]]            # head unblocked via eviction
+        assert rt.metrics.evictions > 0
+        requeued = {e[0].rid for e in rt.offline_queue}
+        survivors = {r.rid for r in slot.offline}
+        # every resident is either still on the engine or requeued
+        assert requeued | survivors == {r.rid for r in reqs}
+        assert all(r.recompute_tokens > 0
+                   for r in reqs if r.rid in requeued)
+
+    def test_pinned_chunk_abort_requeues_request(self, built):
+        """A pinned chunk prefill on a wedged pool (nothing decodable, no
+        chunk admissible, no evictable residents) is aborted back to the
+        queue instead of wedging the engine forever."""
+        rt = _make_rt(built, num_pages=64)
+        slot = rt.relaxed_pool[0]
+        req = Request(Kind.OFFLINE, 0.0, 48, 8)
+        toks = [1] * 48
+        rt.submit(req, toks)
+        rt.offline_queue.clear()
+        slot.engine.add_request(req, toks)
+        entry = (req, toks)
+        slot.prefilling.append(entry)
+        hog = slot.engine.cache.allocator.alloc(
+            slot.engine.cache.allocator.free_pages)   # exhaust the pool
+        cost = rt._decode_slot(slot, 0.0, relaxed=True, prefill=entry)
+        assert cost == 0.0
+        assert not slot.prefilling                    # unpinned
+        assert req.rid not in slot.engine.requests    # engine state cleaned
+        assert any(e[0] is req for e in rt.offline_queue)   # requeued
+        slot.engine.cache.allocator.free(hog)
+
+    def test_contended_replay_drains_without_drops(self, built):
+        """End-to-end: a pool far too small for the backlog forces the
+        eviction/recompute machinery constantly (and regression-guards the
+        decode-batch page reservation against the fused prefill chunk —
+        this config OutOfPagesError'd before the reservation); everything
+        still finishes."""
+        rt = _make_rt(built, num_pages=40)
+        online = tr.online_trace("ooc", duration=5.0, mean_qps=3.0, seed=0)
+        offline = tr.with_uniform_qps(tr.offline_requests(16, seed=1), 20.0)
+        m = rt.run(online, offline, duration=5.0, max_prompt=48,
+                   max_output=24, drain=True)
+        assert m["online_finished"] == m["online_requests"]
+        assert m["offline_finished"] == m["offline_requests"]
+        assert m["evictions"] > 0 and m["recompute_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (skip-safe when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+class TestProperties:
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 24))
+    @settings(max_examples=30, deadline=None)
+    def test_injector_outcome_sequence_deterministic(self, seed, n):
+        plan = "migration_flaky:p=0.5,migration_fail:count=2"
+        a = FaultInjector(FaultPlan.parse(plan), seed)
+        b = FaultInjector(FaultPlan.parse(plan), seed)
+        assert [a.transfer_outcome(0.0) for _ in range(n)] \
+            == [b.transfer_outcome(0.0) for _ in range(n)]
+        assert [a.backoff_seconds(i, 0.05) for i in range(1, 4)] \
+            == [b.backoff_seconds(i, 0.05) for i in range(1, 4)]
+
+    @given(data=st.data())
+    @settings(max_examples=25, deadline=None)
+    def test_no_request_silently_dropped(self, built, data):
+        """Across any interleaving of abort/re-admit cycles and shedding,
+        every submitted request is in exactly one place: a queue or the
+        (surfaced) shed list — never lost, never duplicated."""
+        rt = _prop_rt(built)
+        rt.online_queue.clear()
+        rt.offline_queue.clear()
+        rt.shed.clear()
+        rt.prompts.clear()
+        rt.all_requests.clear()
+        rt.metrics.shed_requests = 0
+        rt.max_offline_backlog = data.draw(
+            st.one_of(st.none(), st.integers(0, 4)))
+        reqs = []
+        for i in range(data.draw(st.integers(1, 10))):
+            kind = data.draw(st.sampled_from([Kind.ONLINE, Kind.OFFLINE]))
+            r = Request(kind, float(i), 8, 4)
+            rt.submit(r, [0] * 8)
+            reqs.append(r)
+        for _ in range(data.draw(st.integers(0, 15))):
+            if data.draw(st.booleans()) and rt.max_offline_backlog is not None:
+                rt._shed_offline()
+                continue
+            pool = rt.offline_queue if rt.offline_queue else rt.online_queue
+            if not pool:
+                continue
+            entry = pool.pop(data.draw(st.integers(0, len(pool) - 1)))
+            req = entry[0]
+            # simulate arbitrary partial progress lost with the abort
+            req.prefill_tokens_done = data.draw(st.integers(0, req.prompt_len))
+            req.generated = data.draw(st.integers(0, req.output_len - 1))
+            rt._readmit(req)
+        queued = ([e[0].rid for e in rt.online_queue]
+                  + [e[0].rid for e in rt.offline_queue])
+        shed = [r.rid for r in rt.shed]
+        assert sorted(queued + shed) == sorted(r.rid for r in reqs)
+        assert rt.metrics.shed_requests == len(shed)
+
+
+_PROP_RT = []
+
+
+def _prop_rt(built):
+    """One dedicated runtime for the queue-accounting property (module
+    model, fresh engines once — examples reset the queue state)."""
+    if not _PROP_RT:
+        _PROP_RT.append(_make_rt(built, num_pages=32, n_relaxed=1))
+    return _PROP_RT[0]
+
+
+# ---------------------------------------------------------------------------
+# launch.serve: atomic writes + chaos flags (satellites a, d, e)
+# ---------------------------------------------------------------------------
+
+class TestServe:
+    def test_atomic_write_no_partial_on_failure(self, tmp_path, monkeypatch):
+        from repro.launch import serve
+        path = tmp_path / "m.json"
+        serve.write_json_atomic(str(path), "first\n")
+        assert path.read_text() == "first\n"
+
+        def boom(src, dst):
+            raise RuntimeError("crash mid-write")
+        monkeypatch.setattr(serve.os, "replace", boom)
+        with pytest.raises(RuntimeError):
+            serve.write_json_atomic(str(path), "second\n")
+        monkeypatch.undo()
+        assert path.read_text() == "first\n"       # old file intact
+        assert os.listdir(tmp_path) == ["m.json"]  # temp file cleaned up
+        serve.write_json_atomic(str(path), "third\n")
+        assert path.read_text() == "third\n"
+
+    def test_chaos_serve_byte_deterministic(self, tmp_path, capsys):
+        from repro.launch.serve import main
+        argv = ["--virtual-clock", "--policy", "ooco", "--strict", "1",
+                "--relaxed", "2", "--duration", "4", "--online-qps", "1.0",
+                "--offline-qps", "4.0", "--num-pages", "256",
+                "--slo-ttft", "1.0", "--slo-tpot", "0.030",
+                "--fault-plan", "crash:relaxed1@2.0", "--chaos-seed", "7"]
+        blobs = []
+        for i in (0, 1):
+            mp = tmp_path / f"m{i}.json"
+            tp = tmp_path / f"t{i}.json"
+            s = main(argv + ["--metrics-json", str(mp),
+                             "--tokens-json", str(tp)])
+            assert s["faults_injected"] == 1 and s["engine_crashes"] == 1
+            blobs.append((mp.read_bytes(), tp.read_bytes()))
+        capsys.readouterr()
+        assert blobs[0] == blobs[1]
