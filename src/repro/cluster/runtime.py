@@ -173,6 +173,9 @@ class Metrics:
     watchdog_aborts: int = 0       # stuck dispatches killed by the watchdog
     shed_requests: int = 0         # offline work shed under bounded backlog
     degraded_rounds: int = 0       # rounds run under overload admission
+    prefill_modeled_seconds: float = 0.0  # modeled prefill compute (chunk-
+                                   # only share of fused rounds) — the
+                                   # denominator of effective prefill tok/s
 
 
 def _pct(xs: list[float], q: float) -> float | None:
@@ -246,6 +249,7 @@ class PoolRuntime:
                  backoff_base: float = 0.05,
                  watchdog_mult: float = 10.0,
                  max_offline_backlog: int | None = None,
+                 prefix_cache: bool = True,
                  model=None, params=None,
                  kernels_from: ServingEngine | None = None):
         _validate_runtime_args(
@@ -280,6 +284,10 @@ class PoolRuntime:
         self.seed = seed
         self.relaxed_decode_cap = relaxed_decode_cap
         self.gating_horizon = gating_horizon
+        # cross-request KV reuse (radix prefix cache + refcounted COW
+        # pages); only effective on the chunked-prefill path — the legacy
+        # layer-interruptible path rewrites whole tables and cannot share
+        self.prefix_cache = bool(prefix_cache) and self.chunked
         if model is None:
             model = build_model(cfg, remat=False)
             params = model.init(jax.random.PRNGKey(seed))
@@ -292,13 +300,15 @@ class PoolRuntime:
         for i in range(n_strict):
             eng = ServingEngine(model, params, num_pages=num_pages,
                                 page_size=page_size, decode_buckets=decode_buckets,
-                                backend=backend, kernels_from=donor)
+                                backend=backend, prefix_cache=self.prefix_cache,
+                                kernels_from=donor)
             donor = donor or eng
             self.strict_pool.append(EngineSlot(f"strict{i}", "strict", eng))
         for i in range(n_relaxed):
             eng = ServingEngine(model, params, num_pages=num_pages,
                                 page_size=page_size, decode_buckets=decode_buckets,
-                                backend=backend, kernels_from=donor)
+                                backend=backend, prefix_cache=self.prefix_cache,
+                                kernels_from=donor)
             self.relaxed_pool.append(EngineSlot(f"relaxed{i}", "relaxed", eng))
         self.kernel_donor = donor  # share compiled kernels across runtimes
         # queues hold (req, tokens[, home_slot]) — home pins a layer-
@@ -445,15 +455,19 @@ class PoolRuntime:
         waste, keep SLO-relevant timestamps. Greedy decoding is batch- and
         chunk-independent (the invariant the eviction path already relies
         on), so the regenerated stream is bit-identical to the lost one."""
+        # prefix-cache claims were page-table updates, not compute — losing
+        # them wastes nothing, so they never count as recompute
         if req.generated > 0:
-            req.recompute_tokens += req.context_len
+            req.recompute_tokens += req.context_len - req.cached_tokens
         elif req.prefill_tokens_done > 0:
-            req.recompute_tokens += req.prefill_tokens_done
+            req.recompute_tokens += (req.prefill_tokens_done
+                                     - req.cached_tokens)
         elif req.prefill_layers_done > 0:
             req.recompute_tokens += req.prompt_len
         req.generated = 0
         req.prefill_layers_done = 0
         req.prefill_tokens_done = 0
+        req.cached_tokens = 0
         req.phase = Phase.QUEUED
         toks = self.prompts[req.rid]
         if req.kind == Kind.ONLINE:
@@ -493,7 +507,7 @@ class PoolRuntime:
         only with ``max_offline_backlog`` configured is excess offline
         queue shed. Online work is never deferred or shed."""
         pools = self.relaxed_pool or self.strict_pool
-        free = min((s.engine.cache.allocator.free_pages
+        free = min((s.engine.cache.available_pages
                     / s.engine.cache.num_pages for s in pools), default=0.0)
         return sch.admission_decision(
             queued_online=len(self.online_queue),
@@ -578,6 +592,7 @@ class PoolRuntime:
             req, toks, home = entry
             if home is None:
                 slot.engine.add_request(req, toks)
+                slot.engine.claim_prefix(req.rid)
             prog.append((req, toks))
             return (req, toks)
         return None
@@ -589,12 +604,13 @@ class PoolRuntime:
         req, toks = self.online_queue[0]
         if not eng.cache.can_fit(len(toks)):
             need = (eng.cache.pages_for(len(toks))
-                    - eng.cache.allocator.free_pages) * eng.cache.page_size
+                    - eng.cache.available_pages) * eng.cache.page_size
             self._evict_from(slot, need)
         if not eng.cache.can_fit(len(toks)):
             return None
         self.online_queue.pop(0)
         eng.add_request(req, toks)
+        eng.claim_prefix(req.rid)
         return (req, toks)
 
     def _admit_prefill_fifo(self, slot: EngineSlot):
@@ -608,6 +624,7 @@ class PoolRuntime:
                 req, toks, home = entry
                 if home is None:
                     slot.engine.add_request(req, toks)
+                    slot.engine.claim_prefix(req.rid)
                 slot.prefilling.append((req, toks))
                 return (req, toks)
         if self.online_queue:
@@ -707,7 +724,7 @@ class PoolRuntime:
             req, toks = self.online_queue.pop(0)
             if not eng.cache.can_fit(len(toks)):
                 need = (eng.cache.pages_for(len(toks))
-                        - eng.cache.allocator.free_pages) * eng.cache.page_size
+                        - eng.cache.available_pages) * eng.cache.page_size
                 self._evict_from(slot, need)
             if not eng.cache.can_fit(len(toks)):
                 self.online_queue.insert(0, (req, toks))
@@ -718,6 +735,7 @@ class PoolRuntime:
             eng.prefill(req.rid)
             cost = self._prefill_cost(est, self.cfg.num_layers,
                                       time.perf_counter() - t0)
+            self.metrics.prefill_modeled_seconds += cost
             if req.first_token_time is None:
                 req.first_token_time = now + cost
             if req.done:
@@ -744,6 +762,7 @@ class PoolRuntime:
         status = eng.prefill(req.rid, should_preempt=preempt)
         cost = self._prefill_cost(est, req.prefill_layers_done - layers_before,
                                   time.perf_counter() - t0)
+        self.metrics.prefill_modeled_seconds += cost
         if status == "preempted":
             req.phase = Phase.QUEUED
             self.offline_queue.insert(0, (req, toks, slot))
@@ -782,11 +801,20 @@ class PoolRuntime:
                     continue
                 if self.policy == "ooco" and req.prefill_layers_done == 0:
                     budget = self._free_kv_bytes(slot)
+                    cached = 0
+                    if (eng.cache.prefix is not None
+                            and req.prefill_tokens_done == 0):
+                        # planning peek, not a claim: how much of this
+                        # prompt the prefix cache would serve (touch=False
+                        # keeps the LRU order unperturbed by rejections)
+                        _, cached = eng.cache.prefix.match(
+                            toks, limit=len(toks) - 1, touch=False)
                     ok = sch.gating_decision(
                         req, slot.offline, self.pm,
                         evict_probability=self._evict_probability(),
                         horizon_seconds=self.gating_horizon,
-                        mem_budget_bytes=budget)
+                        mem_budget_bytes=budget,
+                        cached_tokens=cached)
                     if not ok:
                         continue
             self.offline_queue.remove(entry)
@@ -817,7 +845,7 @@ class PoolRuntime:
     # ------------------------------------------------------------------
     def _free_kv_bytes(self, slot: EngineSlot) -> float:
         cache = slot.engine.cache
-        return (cache.allocator.free_pages * cache.page_size
+        return (cache.available_pages * cache.page_size
                 * max(self.pm.kv_bytes_per_token(), 1.0))
 
     def _pool_kv_bytes(self, slot: EngineSlot) -> float:
@@ -837,11 +865,11 @@ class PoolRuntime:
             return 0.0
         n = src.engine.cache.lengths[req.rid]
         dst = max(self.strict_pool,
-                  key=lambda s: s.engine.cache.allocator.free_pages)
+                  key=lambda s: s.engine.cache.available_pages)
         if not dst.engine.cache.can_fit(n) and req.kind == Kind.ONLINE:
             # only online work may evict offline victims to claim space
             need = (dst.engine.cache.pages_for(n)
-                    - dst.engine.cache.allocator.free_pages) \
+                    - dst.engine.cache.available_pages) \
                 * dst.engine.cache.page_size
             self._evict_from(dst, need)
         if not dst.engine.cache.can_fit(n):
@@ -862,7 +890,7 @@ class PoolRuntime:
                 self.place_queue.remove(entry)
                 continue
             dst = max(self.strict_pool,
-                      key=lambda s: s.engine.cache.allocator.free_pages)
+                      key=lambda s: s.engine.cache.available_pages)
             if dst.engine.cache.can_fit(src.engine.cache.lengths[req.rid]):
                 self.place_queue.remove(entry)
                 self._migrate(req, src, dst)
@@ -933,8 +961,14 @@ class PoolRuntime:
             return
         exclude = exclude or set()
         candidates = [r for r in slot.offline if r.rid not in exclude]
+        # refcount-aware ranking: a victim frees only its UNSHARED pages
+        # (prefix-cache siblings keep theirs), so prefer unshared requests
+        # and never pick one that would free nothing
+        shared = {r.rid: slot.engine.cache.shared_tokens(r.rid)
+                  for r in candidates} if self.prefix_cache else None
         victims = sch.select_eviction_victims(
-            candidates, int(np.ceil(need_tokens)), slot.last_bottleneck)
+            candidates, int(np.ceil(need_tokens)), slot.last_bottleneck,
+            shared_tokens=shared)
         eng = slot.engine
         for r in victims:
             slot.offline.remove(r)
@@ -947,6 +981,7 @@ class PoolRuntime:
             r.generated = 0
             r.prefill_layers_done = 0
             r.prefill_tokens_done = 0
+            r.cached_tokens = 0    # re-claimed (if still cached) on re-admit
             self.offline_queue.append((r, toks, None))
             self.metrics.evictions += 1
 
@@ -1032,7 +1067,7 @@ class PoolRuntime:
             if r.rid not in slot.engine.requests:
                 continue   # evicted mid-fit by an earlier online row
             inc = cache.pages_for(r.context_len) - len(cache.tables.get(r.rid, []))
-            free = cache.allocator.free_pages
+            free = cache.available_pages
             if need + inc <= free:
                 out.append(r)
                 need += inc
@@ -1041,7 +1076,7 @@ class PoolRuntime:
                 shortfall = (need + inc - free) * cache.page_size
                 self._evict_from(slot, shortfall,
                                  exclude={x.rid for x in out} | {r.rid})
-                if need + inc <= cache.allocator.free_pages:
+                if need + inc <= cache.available_pages:
                     out.append(r)
                     need += inc
         if not out and batch:
@@ -1051,9 +1086,9 @@ class PoolRuntime:
             r = batch[0]
             inc = cache.pages_for(r.context_len) - len(cache.tables.get(r.rid, []))
             self._evict_from(
-                slot, (inc - cache.allocator.free_pages) * cache.page_size,
+                slot, (inc - cache.available_pages) * cache.page_size,
                 exclude={r.rid})
-            if r.rid in slot.engine.requests and inc <= cache.allocator.free_pages:
+            if r.rid in slot.engine.requests and inc <= cache.available_pages:
                 out = [r]
         return out
 
@@ -1104,7 +1139,13 @@ class PoolRuntime:
         dec_ctx = [r.context_len for r in batch]
         if chunk:
             est = self.pm.mixed_estimate(
-                chunk, pf_req.prefill_tokens_done + chunk, dec_ctx)
+                chunk, pf_req.prefill_tokens_done + chunk, dec_ctx,
+                cached_tokens=pf_req.cached_tokens)
+            # chunk-only share of the fused round — the denominator of
+            # effective prefill throughput in the prefix-reuse bench
+            self.metrics.prefill_modeled_seconds += self.pm.mixed_estimate(
+                chunk, pf_req.prefill_tokens_done + chunk, (),
+                cached_tokens=pf_req.cached_tokens).latency
         elif horizon > 1:
             # one dispatch overhead for the whole horizon — the virtual
             # clock charges the amortization the fused dispatch buys
@@ -1187,7 +1228,7 @@ class PoolRuntime:
         slack = len(cache.tables.get(req.rid, [])) * cache.page_size - done
 
         def free_tok() -> int:
-            free = cache.allocator.free_pages - reserved_pages
+            free = cache.available_pages - reserved_pages
             return max(free, 0) * cache.page_size + max(slack, 0)
 
         avail = free_tok()
@@ -1261,8 +1302,13 @@ class PoolRuntime:
             p[0] <= self.clock.now() for p in pending if p[1] == 0)
         hard_cap = 10 * duration if duration else float("inf")
 
-        def make_tokens(n: int) -> list[int]:
-            n = int(np.clip(-(-n // 8) * 8, 8, max_prompt))
+        def make_tokens(t: TraceRequest) -> list[int]:
+            if getattr(t, "tokens", None) is not None:
+                # trace carries explicit content (shared-prefix workloads);
+                # trim to the runtime cap but keep the prefix intact so
+                # cross-request reuse survives the clip
+                return [int(x) for x in t.tokens[:max_prompt]]
+            n = int(np.clip(-(-t.prompt_len // 8) * 8, 8, max_prompt))
             return [int(x) for x in rng.integers(0, self.cfg.vocab_size, n)]
 
         while True:
@@ -1270,7 +1316,7 @@ class PoolRuntime:
             while pending and pending[0][0] <= now:
                 arr, kcode, _, t = pending.pop(0)
                 kind = Kind.ONLINE if kcode == 0 else Kind.OFFLINE
-                toks = make_tokens(t.prompt_len)
+                toks = make_tokens(t)
                 req = Request(kind, arr, len(toks),
                               max(min(t.output_len, max_output), 1))
                 self.submit(req, toks)
@@ -1339,6 +1385,23 @@ class PoolRuntime:
             "migrations": self.metrics.migrations,
             "pulls": self.metrics.pulls,
             "evictions": self.metrics.evictions,
+            # cross-request KV reuse: prompt claims against the radix
+            # prefix cache (hits / tokens served / pages shared at claim
+            # time) and tree pages dropped under pool pressure
+            "prefix_cache": self.prefix_cache,
+            "prefix_hits": int(sum(s.engine.stats.prefix_hits
+                                   for s in pools)),
+            "cached_tokens": int(sum(s.engine.stats.cached_tokens
+                                     for s in pools)),
+            "shared_pages": int(sum(s.engine.stats.shared_pages
+                                    for s in pools)),
+            "prefix_evictions": int(sum(
+                s.engine.cache.prefix.evictions for s in pools
+                if s.engine.cache.prefix is not None)),
+            "prefill_tokens": int(sum(s.engine.stats.prefill_tokens
+                                      for s in pools)),
+            "prefill_modeled_seconds": float(
+                self.metrics.prefill_modeled_seconds),
             "rounds": self.metrics.rounds,
             "idle_rounds": self.metrics.idle_rounds,
             # fault-tolerance counters: nonzero only under injected chaos

@@ -221,16 +221,44 @@ class PerfModel:
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
-    def prefill_estimate(self, seq_lens: Sequence[int]) -> StepEstimate:
-        """One prefill iteration over requests with the given prompt lengths."""
-        n_tokens = int(sum(seq_lens))
-        # causal attention: Skv averages to S/2 over query positions
-        ops = self._all_layers(n_tokens, list(seq_lens),
-                               [max(s // 2, 1) for s in seq_lens], decode=False)
-        return self._sum(ops, self.hw.O_p, kv_bytes=self.kv_bytes(seq_lens))
+    def _page_table_op(self, cached_tokens: int) -> OpCost:
+        """A prefix-cache hit converts prefill work into a page-table
+        update: one page-id write (~4 B/token amortized) plus a refcount
+        bump per claimed page — pure bookkeeping bandwidth, zero FLOPs."""
+        return OpCost("page_table", 0.0, 4.0 * cached_tokens, "other")
+
+    def prefill_estimate(self, seq_lens: Sequence[int],
+                         cached_tokens: Sequence[int] | None = None
+                         ) -> StepEstimate:
+        """One prefill iteration over requests with the given prompt
+        lengths. ``cached_tokens[i]`` prompt tokens of request *i* are
+        served from the prefix cache (page-table update, no compute); only
+        the uncached suffix runs through the stack, though each suffix
+        query still attends over the full cached context."""
+        seq_lens = list(seq_lens)
+        if cached_tokens is None:
+            cached = [0] * len(seq_lens)
+        else:
+            # a hit never covers the whole prompt (last token is always
+            # computed so the first output token exists)
+            cached = [min(max(int(c), 0), s - 1)
+                      for c, s in zip(cached_tokens, seq_lens)]
+        new = [s - c for s, c in zip(seq_lens, cached)]
+        n_tokens = int(sum(new))
+        # causal attention: a suffix query attends over the cached prefix
+        # plus, on average, half of the new span
+        ops = self._all_layers(n_tokens, new,
+                               [max(c + n // 2, 1)
+                                for c, n in zip(cached, new)], decode=False)
+        tot_cached = sum(cached)
+        if tot_cached:
+            ops.append(self._page_table_op(tot_cached))
+        # only the suffix KV is newly written; cached pages are resident
+        return self._sum(ops, self.hw.O_p, kv_bytes=self.kv_bytes(new))
 
     def mixed_estimate(self, chunk_tokens: int, chunk_ctx: int,
-                       decode_ctx: Sequence[int] = ()) -> StepEstimate:
+                       decode_ctx: Sequence[int] = (), *,
+                       cached_tokens: int = 0) -> StepEstimate:
         """One **fused mixed step**: a prefill chunk of ``chunk_tokens``
         (query positions ``[chunk_ctx - chunk_tokens, chunk_ctx)`` attending
         to the ``chunk_ctx`` tokens landed so far) executed in the same
@@ -240,8 +268,16 @@ class PerfModel:
         but the static dispatch overhead is paid **once** — the structural
         win of fusing over the serialized prefill-then-decode rounds
         (Sarathi-style chunked prefill, paper §3.4.1 boundary granularity).
+
+        ``cached_tokens`` of ``chunk_ctx`` came from the prefix cache: they
+        were never computed here, so the step only adds KV capacity for the
+        residual context and pays a page-table bookkeeping op for the
+        claim. The chunk's attention span is unchanged — suffix queries
+        attend over cached keys just the same.
         """
         chunk_tokens = int(chunk_tokens)
+        cached_tokens = max(0, min(int(cached_tokens),
+                                   int(chunk_ctx) - chunk_tokens))
         decode_ctx = np.asarray(list(decode_ctx), np.float64)
         overhead = max(self.hw.O_p if chunk_tokens else 0.0,
                        self.hw.O_d if decode_ctx.size else 0.0)
@@ -251,6 +287,8 @@ class PerfModel:
             skv = max(int(chunk_ctx) - chunk_tokens // 2, 1)
             ops = self._all_layers(chunk_tokens, [chunk_tokens], [skv],
                                    decode=False)
+            if cached_tokens:
+                ops.append(self._page_table_op(cached_tokens))
             p = self._sum(ops, 0.0, kv_bytes=0.0)
             lat += p.latency
             fl += p.flops
@@ -258,7 +296,7 @@ class PerfModel:
             comp += p.compute_time
             mem += p.memory_time
             comm += p.comm_time
-            kvb += self.kv_bytes([chunk_ctx])
+            kvb += self.kv_bytes([max(int(chunk_ctx) - cached_tokens, 1)])
         if decode_ctx.size:
             d = self._fast_decode(decode_ctx)
             lat += d.latency - self.hw.O_d
@@ -315,7 +353,8 @@ class PerfModel:
 
     def suggest_chunk_tokens(self, decode_ctx: Sequence[int] = (), *,
                              slo: float | None = None, chunk_ctx: int = 0,
-                             bucket: int = 8, max_chunk: int = 4096) -> int:
+                             bucket: int = 8, max_chunk: int = 4096,
+                             cached_tokens: int = 0) -> int:
         """Pick the prefill-chunk token budget for a fused mixed step from
         the roofline ridge: start at ``prefill_saturation_tokens`` (decode
         rows share the GEMM, so their batch size is subtracted), round up to
@@ -333,8 +372,10 @@ class PerfModel:
         while lo <= hi:
             mid = (lo + hi) // 2
             t = mid * bucket
-            if self.mixed_estimate(t, max(chunk_ctx, t),
-                                   decode_ctx).latency <= slo:
+            # a warm-started chunk's context is at least cached + chunk
+            if self.mixed_estimate(t, max(chunk_ctx, cached_tokens + t),
+                                   decode_ctx,
+                                   cached_tokens=cached_tokens).latency <= slo:
                 best, lo = t, mid + 1
             else:
                 hi = mid - 1

@@ -37,6 +37,8 @@ class Request:
     generated: int = 0
     prefill_layers_done: int = 0     # layer-level interruption progress
     prefill_tokens_done: int = 0     # chunked-prefill progress (tokens landed)
+    cached_tokens: int = 0           # leading tokens claimed from the prefix
+                                     # cache (counted in prefill_tokens_done)
     location: str | None = None      # instance id currently holding state
     prefill_end: float | None = None
     first_token_time: float | None = None

@@ -181,7 +181,8 @@ def token_budget_schedule(
             mid = (lo + hi) // 2
             t = min(mid * bucket, chunk)
             est = pm.mixed_estimate(
-                t, prefill.prefill_tokens_done + t, dec_ctx)
+                t, prefill.prefill_tokens_done + t, dec_ctx,
+                cached_tokens=getattr(prefill, "cached_tokens", 0))
             if est.latency <= slo:
                 best, lo = t, mid + 1
             else:
@@ -330,6 +331,7 @@ def select_eviction_victims(
     offline_running: Sequence[Request],
     needed_tokens: int,
     bottleneck: str,
+    shared_tokens: "dict[int, int] | None" = None,
 ) -> list[Request]:
     """Free >= needed_tokens of KV space for an incoming online request.
 
@@ -337,17 +339,38 @@ def select_eviction_victims(
     size, which is what compute efficiency depends on); otherwise evict
     SHORT ones (cheap recompute). Paper §3.4.1.
 
+    ``shared_tokens`` maps rid -> tokens living on refcount>1 pages (the
+    prefix cache). Evicting such a request frees only its UNSHARED tail —
+    the shared pages stay resident for siblings — so victims are ranked by
+    the space they actually release, unshared requests are preferred, and a
+    victim that frees nothing is never picked while an alternative exists.
+
     Online requests are never eviction victims, even if the caller passes a
     mixed resident list (§3.4.1 evicts offline work only)."""
     candidates = [r for r in offline_running if r.kind is not Kind.ONLINE]
-    key = (lambda r: -r.context_len) if bottleneck == "compute" else (lambda r: r.context_len)
+    shared = shared_tokens or {}
+
+    def releasable(r: Request) -> int:
+        return max(r.context_len - shared.get(r.rid, 0), 0)
+
+    key = ((lambda r: (-releasable(r), -r.context_len))
+           if bottleneck == "compute"
+           else (lambda r: (shared.get(r.rid, 0) > 0, r.context_len)))
+    ranked = sorted(candidates, key=key)
     victims, freed = [], 0
-    for r in sorted(candidates, key=key):
+    for r in ranked:
         if freed >= needed_tokens:
             break
+        if releasable(r) == 0 and shared:
+            continue   # frees nothing: shared pages survive the eviction
         victims.append(r)
-        freed += r.context_len
-    return victims if freed >= needed_tokens else candidates
+        freed += releasable(r) if shared else r.context_len
+    if freed >= needed_tokens:
+        return victims
+    # cannot satisfy the demand: fall back to every candidate that frees
+    # anything at all (legacy behavior when no sharing info is supplied)
+    return [r for r in candidates if not shared or releasable(r) > 0] \
+        or candidates
 
 
 # ---------------------------------------------------------------------------
@@ -401,12 +424,20 @@ def gating_decision(
     evict_probability: float,
     horizon_seconds: float,
     mem_budget_bytes: float,
+    cached_tokens: int = 0,
 ) -> bool:
     """Prefill a new offline request on a relaxed node only if the expected
     throughput gain from the larger decode batch exceeds the expected
-    recompute cost from potential eviction."""
+    recompute cost from potential eviction.
+
+    ``cached_tokens`` is the candidate's prefix-cache hit length: cached
+    tokens cost a page-table update instead of prefill FLOPs and add no new
+    KV bytes, so a warm candidate is both cheaper to admit and cheaper to
+    lose — the gate sees its true residual work."""
+    cached = max(0, min(int(cached_tokens), candidate.prompt_len - 1))
     ctx = [r.context_len for r in current_offline_batch]
-    if pm.kv_bytes(ctx + [candidate.prompt_len]) > mem_budget_bytes:
+    # shared pages are already resident: only the suffix adds KV pressure
+    if pm.kv_bytes(ctx + [candidate.prompt_len - cached]) > mem_budget_bytes:
         return False
     if not ctx:
         return True  # idle node: always worth prefilling
@@ -415,6 +446,7 @@ def gating_decision(
     rate_now = len(ctx) / lat_now
     rate_new = (len(ctx) + 1) / lat_new
     gain_tokens = max(rate_new - rate_now, 0.0) * horizon_seconds
-    prefill_s = pm.prefill_estimate([candidate.prompt_len]).latency
+    prefill_s = pm.prefill_estimate([candidate.prompt_len],
+                                    [cached]).latency
     cost_tokens = evict_probability * prefill_s * rate_new
     return gain_tokens > cost_tokens

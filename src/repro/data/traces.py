@@ -34,6 +34,10 @@ class TraceRequest:
     arrival: float
     prompt_len: int
     output_len: int
+    # explicit prompt token ids (shared-prefix workloads, where content —
+    # not just length — matters for cross-request KV reuse); None = the
+    # runtime synthesizes random tokens from its seed as before
+    tokens: tuple[int, ...] | None = None
 
 
 def _lognormal_lengths(rng: np.random.Generator, mean: float, n: int,
@@ -96,6 +100,38 @@ def offline_requests(n: int, *, seed: int = 1) -> list[TraceRequest]:
     pl = _lognormal_lengths(rng, DATASET_STATS["ooc_offline"][0], n)
     ol = _lognormal_lengths(rng, DATASET_STATS["ooc_offline"][1], n, hi=8192)
     return [TraceRequest(0.0, int(p), int(o)) for p, o in zip(pl, ol)]
+
+
+def shared_prefix_requests(num_prefixes: int = 2, variants: int = 2,
+                           queries: int = 4, *, prefix_tokens: int = 48,
+                           variant_tokens: int = 16, query_tokens: int = 8,
+                           output_len: int = 4, vocab: int = 256,
+                           seed: int = 3) -> list[TraceRequest]:
+    """Shared-prefix offline workload: ``num_prefixes`` system prompts x
+    ``variants`` few-shot variants x ``queries`` user queries (the ConServe/
+    sglang analytics shape — prompts share long block-aligned prefixes by
+    construction, so a radix prefix cache serves most prefill tokens from
+    resident pages). Every request carries EXPLICIT token ids:
+
+      [system prompt | few-shot variant | unique query]
+
+    with the system prompt shared by ``variants * queries`` requests and
+    each (prompt, variant) pair shared by ``queries``. Token content is
+    drawn deterministically from ``seed``; arrivals are assigned by the QPS
+    controller (``with_uniform_qps``) like the other offline generators."""
+    rng = np.random.default_rng(seed)
+    out: list[TraceRequest] = []
+    for p in range(num_prefixes):
+        sys_toks = rng.integers(0, vocab, prefix_tokens)
+        for v in range(variants):
+            var_toks = rng.integers(0, vocab, variant_tokens)
+            for q in range(queries):
+                qry_toks = rng.integers(0, vocab, query_tokens)
+                toks = tuple(int(x) for x in
+                             np.concatenate([sys_toks, var_toks, qry_toks]))
+                out.append(TraceRequest(0.0, len(toks), output_len,
+                                        tokens=toks))
+    return out
 
 
 def with_uniform_qps(reqs: list[TraceRequest], qps: float,

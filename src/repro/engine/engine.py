@@ -184,6 +184,9 @@ class ChunkedPrefill:
     rid: int
     tokens: np.ndarray        # full prompt token ids
     done: int = 0             # tokens landed (all layers, KV in the pool)
+    cached: int = 0           # leading tokens claimed from the prefix cache
+                              # (block-aligned; counted in `done` but never
+                              # computed here — aborts must not bill them)
 
 
 @dataclass
@@ -200,6 +203,9 @@ class EngineStats:
     horizon_steps: int = 0    # decode iterations run inside K>1 horizons
     prefill_seconds: float = 0.0
     decode_seconds: float = 0.0
+    prefix_hits: int = 0      # prompts that claimed >= 1 cached prefix page
+    cached_tokens: int = 0    # prompt tokens served from the prefix cache
+    shared_pages: int = 0     # pages claimed via refcount bumps, cumulative
 
 
 class ServingEngine:
@@ -207,6 +213,7 @@ class ServingEngine:
                  page_size: int = 16, decode_buckets: tuple[int, ...] = (1, 2, 4, 8, 16, 32),
                  perf_model: PerfModel | None = None, backend: str = "auto",
                  sampling: SamplingParams | None = None,
+                 prefix_cache: bool = False,
                  kernels_from: "ServingEngine | None" = None):
         cfg = model.cfg
         assert not cfg.local_global and not cfg.sliding_window, \
@@ -217,7 +224,8 @@ class ServingEngine:
         self.params = params
         self.backend = resolve_backend(backend)
         self.sampling = sampling or SamplingParams()
-        self.cache = PagedKVCache(cfg, num_pages, page_size)
+        self.cache = PagedKVCache(cfg, num_pages, page_size,
+                                  enable_prefix_cache=prefix_cache)
         self.decode_buckets = tuple(sorted(decode_buckets))
         self.perf_model = perf_model
         self.requests: dict[int, Request] = {}
@@ -282,6 +290,10 @@ class ServingEngine:
         self.req_sampling.clear()
         self.cache.tables.clear()
         self.cache.lengths.clear()
+        if self.cache.prefix is not None:
+            # the radix tree indexes pool pages that no longer exist —
+            # simply dropped; recovery recomputes (token parity holds)
+            self.cache.prefix.clear()
 
     def _check_alive(self) -> None:
         if not self.alive:
@@ -371,6 +383,11 @@ class ServingEngine:
         """Run (or resume) prefill for one request, checking the preemption
         callback between transformer layers. Returns "done" | "preempted"."""
         self._check_alive()
+        # the legacy layer-granular path writes the WHOLE table via
+        # write_prefill_layers — it must never run over a warm prefix claim
+        # (that would overwrite pages shared with sibling requests)
+        assert rid not in self.chunk_state, \
+            "legacy prefill() cannot resume a chunked/warm-started request"
         t0 = time.perf_counter()
         req = self.requests[rid]
         cfg = self.cfg
@@ -433,12 +450,15 @@ class ServingEngine:
         self.cache.free(rid)
         req = self.requests[rid]
         if state is not None:
-            req.recompute_tokens += state.done
+            # cached tokens were claimed from the prefix tree, not computed
+            # here — losing them wastes no FLOPs
+            req.recompute_tokens += state.done - state.cached
         elif part is not None:
             req.recompute_tokens += req.prompt_len
         # neither: nothing was computed yet -> nothing wasted
         req.prefill_layers_done = 0
         req.prefill_tokens_done = 0
+        req.cached_tokens = 0
         req.phase = Phase.QUEUED
 
     # ------------------------------------------------------------------
@@ -691,7 +711,7 @@ class ServingEngine:
         pool (the claim is monotone in steps, and the K=1 claim is exactly
         what ``decode_step`` would take, so an admitted batch always gets at
         least 1)."""
-        free = self.cache.allocator.free_pages
+        free = self.cache.available_pages
 
         def need(k: int) -> int:
             tot = 0
@@ -943,6 +963,34 @@ class ServingEngine:
         state = self.chunk_state.get(rid)
         return state.done if state is not None else 0
 
+    def claim_prefix(self, rid: int) -> int:
+        """Match the request's prompt against the radix prefix cache and
+        claim the hit by bumping page refcounts. Returns the matched token
+        count (0 on miss / cache disabled). The match is capped at
+        ``prompt_len - 1`` and rounded down to a page boundary, so the
+        uncached suffix is >= 1 token and starts exactly on a fresh page:
+        shared pages are never written — copy-on-write by construction.
+        Chunked prefill then resumes at the match boundary."""
+        if self.cache.prefix is None:
+            return 0
+        if rid in self.chunk_state or rid in self.cache.tables:
+            return 0   # already started (warm or cold) — nothing to claim
+        req = self.requests[rid]
+        tokens = np.asarray(self.token_buf[rid][: req.prompt_len], np.int32)
+        pages, matched = self.cache.prefix.match(
+            tokens.tolist(), limit=req.prompt_len - 1)
+        if matched == 0:
+            return 0
+        self.cache.adopt(rid, pages, matched)
+        self.chunk_state[rid] = ChunkedPrefill(
+            rid, tokens, done=matched, cached=matched)
+        req.prefill_tokens_done = matched
+        req.cached_tokens = matched
+        self.stats.prefix_hits += 1
+        self.stats.cached_tokens += matched
+        self.stats.shared_pages += len(pages)
+        return matched
+
     def _mixed_dispatch(self, rids: list[int], prid: int,
                         chunk_tokens: int) -> dict[int, int]:
         t0 = time.perf_counter()
@@ -951,6 +999,11 @@ class ServingEngine:
         if state is None:
             assert prid not in self.partial, \
                 "request already mid layer-granular prefill"
+            # direct engine users reach the cache here; the cluster runtime
+            # claims earlier (at admission) so planning sees residual work
+            self.claim_prefix(prid)
+            state = self.chunk_state.get(prid)
+        if state is None:
             state = self.chunk_state[prid] = ChunkedPrefill(
                 prid, np.asarray(self.token_buf[prid][: req.prompt_len],
                                  np.int32))
@@ -1004,6 +1057,12 @@ class ServingEngine:
             req.generated = 1
             req.phase = Phase.DECODING
             self.stats.prefill_tokens += req.prompt_len
+            if self.cache.prefix is not None:
+                # publish the full pages into the radix tree (refcount bump
+                # per adopted page) so later prompts can reuse them; the
+                # partial tail page stays private
+                self.cache.prefix.insert(
+                    state.tokens.tolist(), self.cache.tables[prid])
             del self.chunk_state[prid]
             if req.done:   # one-output request: finished at prefill
                 req.phase = Phase.FINISHED

@@ -72,8 +72,20 @@ def build_traces(args, cfg):
     online = tr.online_trace("ooc", duration=args.duration,
                              mean_qps=args.online_qps, seed=args.seed)
     n_off = max(int(args.offline_qps * args.duration), 1)
-    offline = tr.with_uniform_qps(tr.offline_requests(n_off, seed=args.seed + 1),
-                                  args.offline_qps)
+    if args.trace == "shared-prefix":
+        # P system prompts x Q few-shot variants x R queries with explicit
+        # token content — the cross-request KV-reuse workload; sized to
+        # the same offline request count as the ooc trace
+        reqs = tr.shared_prefix_requests(
+            num_prefixes=max(n_off // 8, 1), variants=2, queries=4,
+            prefix_tokens=args.max_prompt // 2,
+            variant_tokens=args.max_prompt // 8,
+            query_tokens=args.max_prompt // 8,
+            vocab=cfg.vocab_size, seed=args.seed + 1)[:n_off]
+        offline = tr.with_uniform_qps(reqs, args.offline_qps)
+    else:
+        offline = tr.with_uniform_qps(
+            tr.offline_requests(n_off, seed=args.seed + 1), args.offline_qps)
     return online, offline
 
 
@@ -105,6 +117,18 @@ def main(argv=None):
                          "per-dispatch overhead under the §3.4.1 preemption "
                          "bound), N fixes it, 1 disables fusion (one host "
                          "sync per token — today's behavior)")
+    ap.add_argument("--trace", default="ooc",
+                    choices=["ooc", "shared-prefix"],
+                    help="offline workload: 'ooc' draws lengths from the "
+                         "paper's Table-5 statistics; 'shared-prefix' "
+                         "generates P system prompts x Q few-shot variants "
+                         "x R queries with explicit token content (the "
+                         "cross-request KV-reuse workload)")
+    ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
+                    help="cross-request KV reuse: radix prefix cache over "
+                         "resident pages with refcounted copy-on-write "
+                         "sharing (chunked-prefill path only; greedy token "
+                         "streams are bit-identical either way)")
     ap.add_argument("--duration", type=float, default=20.0)
     ap.add_argument("--online-qps", type=float, default=0.5)
     ap.add_argument("--offline-qps", type=float, default=1.0)
@@ -149,6 +173,7 @@ def main(argv=None):
                           num_pages=args.num_pages, seed=args.seed,
                           backend=args.backend, hw=hw, chunk_tokens=chunk,
                           decode_horizon=horizon,
+                          prefix_cache=args.prefix_cache == "on",
                           fault_plan=args.fault_plan,
                           chaos_seed=args.chaos_seed)
     online, offline = build_traces(args, cfg)
