@@ -1,0 +1,256 @@
+"""Gateway load harness: hundreds of concurrent live streams with bursty
+arrivals, mid-stream disconnects, deadline mixes, and (optionally) injected
+engine crashes — the PR 9 robustness gate.
+
+What it proves, every run (hard asserts, not just reported numbers):
+
+* **terminal-state partition** — every submitted stream reaches exactly one
+  of finished / cancelled / deadline-aborted / rejected, client-side counts
+  reconciled against the runtime's ``summary()`` counters;
+* **zero-leak drain** — after graceful drain the allocator reports zero
+  allocated pages on every live engine (KV pages cannot leak through
+  cancellation, deadlines, disconnects, or crash recovery);
+* **SLO structure under load** — online TTFT/TPOT p99 stay inside the
+  (deliberately CPU-generous) SLOs while >= 10% of clients disconnect
+  mid-stream and a slice of requests carries deadlines tight enough to
+  blow.
+
+The chaos variant reuses the PR 6 ``FaultPlan`` (a relaxed engine crashes
+mid-burst) and must satisfy the same three contracts — crash recovery may
+cost throughput, never correctness.
+
+  PYTHONPATH=src python -m benchmarks.bench_gateway [--quick] [--chaos]
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import time
+
+import numpy as np
+
+# CPU-generous SLOs: the gate is structural (p99 must stay bounded under
+# churn), not a datacenter latency claim — CI machines vary 10x.
+SLO_TTFT = 60.0
+SLO_TPOT = 2.0
+
+
+def _build_runtime(model_bundle, *, n_relaxed=1, fault_plan=None,
+                   max_online_queue=256):
+    from repro.cluster.runtime import PoolRuntime, WallClock
+    model, params, donor = model_bundle
+    return PoolRuntime(
+        model.cfg, policy="ooco", n_strict=1, n_relaxed=n_relaxed,
+        clock=WallClock(), slo_ttft=SLO_TTFT, slo_tpot=SLO_TPOT,
+        num_pages=512, page_size=8, backend="ref",
+        max_online_queue=max_online_queue, fault_plan=fault_plan,
+        chaos_seed=7, model=model, params=params, kernels_from=donor)
+
+
+def _model_bundle(arch: str = "qwen2.5-7b"):
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return [model, params, None]
+
+
+async def _run_load(gateway, *, n_streams: int, seed: int,
+                    max_new_tokens: int, vocab: int) -> dict:
+    """Drive ``n_streams`` concurrent clients with seeded bursty arrivals.
+
+    Deterministically (by seed) assigns each client a role: ~15% disconnect
+    mid-stream, ~10% carry a deadline tight enough to blow under load,
+    ~10% carry a loose deadline they should meet, ~20% are offline."""
+    from repro.cluster.gateway import AdmissionRejected
+    from repro.core.request import Kind
+
+    rng = np.random.default_rng(seed)
+    n_bursts = max(n_streams // 20, 1)
+    burst_at = np.sort(rng.uniform(0.0, 3.0, n_bursts))
+    arrivals = np.sort(
+        burst_at[rng.integers(0, n_bursts, n_streams)]
+        + rng.exponential(0.05, n_streams))
+    # exact role counts (the >= 10% disconnect floor is a hard guarantee,
+    # not an expectation over a random draw), shuffled across arrivals
+    n_disc = max(n_streams * 15 // 100, 1)
+    n_tight = max(n_streams // 10, 1)
+    n_loose = max(n_streams // 10, 1)
+    n_off = max(n_streams // 5, 1)
+    roles = (["disconnect"] * n_disc + ["deadline_tight"] * n_tight
+             + ["deadline_loose"] * n_loose + ["offline"] * n_off
+             + ["plain"] * (n_streams - n_disc - n_tight - n_loose - n_off))
+    rng.shuffle(roles)
+    prompts = rng.integers(1, vocab, (n_streams, 8))
+    counts = {"finished": 0, "cancelled": 0, "deadline": 0,
+              "rejected": 0, "error": 0}
+    t0 = time.perf_counter()
+
+    async def client(i: int) -> str:
+        await asyncio.sleep(max(arrivals[i] - (time.perf_counter() - t0), 0))
+        role = roles[i]
+        kw = {"kind": Kind.OFFLINE if role == "offline" else Kind.ONLINE,
+              "max_new_tokens": max_new_tokens}
+        if role == "deadline_tight":
+            kw["total_deadline"] = 0.2     # blows under a 200-way burst
+        elif role == "deadline_loose":
+            kw["total_deadline"] = 300.0   # must be met
+        try:
+            stream = await gateway.submit(prompts[i].tolist(), **kw)
+        except AdmissionRejected:
+            return "rejected"
+        got = 0
+        async for _tok in stream:
+            got += 1
+            if role == "disconnect" and got >= max(max_new_tokens // 2, 1):
+                if await stream.cancel():   # client walks away mid-stream
+                    return "cancelled"
+                break   # lost the race: already terminal server-side
+        if stream.outcome is None:
+            async for _tok in stream:      # drain to the terminal event
+                pass
+        return stream.outcome or "error"
+
+    outcomes = await asyncio.gather(*(client(i) for i in range(n_streams)))
+    for o in outcomes:
+        counts[o if o in counts else "error"] += 1
+    counts["loose_deadline_missed"] = sum(
+        1 for i, o in enumerate(outcomes)
+        if roles[i] == "deadline_loose" and o == "deadline")
+    return counts
+
+
+def _probe_backpressure(gw, rt) -> tuple[int, int]:
+    """Deterministic bounded-admission check: clamp the online bound to the
+    current queue depth + 1 and push 4 submits under the runtime lock (so
+    the scheduler cannot drain between them) — exactly one admits, three
+    bounce with ``AdmissionRejected``. The admitted request runs to
+    completion during drain (no client stream; counted server-side)."""
+    from repro.cluster.runtime import AdmissionRejected
+    from repro.core.request import Kind, Request
+    ok = rej = 0
+    with gw._lock:
+        old = rt.max_online_queue
+        rt.max_online_queue = len(rt.online_queue) + 1
+        try:
+            for _ in range(4):
+                req = Request(Kind.ONLINE, rt.clock.now(), 8, 1)
+                try:
+                    rt.submit(req, [5] * 8)
+                    ok += 1
+                except AdmissionRejected:
+                    rej += 1
+        finally:
+            rt.max_online_queue = old
+    gw._wake.set()
+    return ok, rej
+
+
+async def _one_run(model_bundle, *, n_streams: int, seed: int, chaos: bool,
+                   max_new_tokens: int, verbose: bool) -> dict:
+    from repro.cluster.gateway import Gateway
+    rt = _build_runtime(
+        model_bundle,
+        n_relaxed=2 if chaos else 1,
+        fault_plan="crash:relaxed1@1.5" if chaos else None)
+    if model_bundle[2] is None:
+        model_bundle[2] = rt.kernel_donor   # share compiled kernels onward
+    gw = Gateway(rt)
+    await gw.start()
+    # warmup: trigger the jit variants (prefill buckets, decode step) so
+    # compile time never pollutes measured TTFT/TPOT percentiles
+    warm = await gw.submit(list(range(1, 9)), max_new_tokens=2)
+    async for _ in warm:
+        pass
+    with gw._lock:
+        rt.clock.reset()   # t=0 is the start of the measured load phase
+    counts = await _run_load(gw, n_streams=n_streams, seed=seed,
+                             max_new_tokens=max_new_tokens,
+                             vocab=rt.cfg.vocab_size)
+    probe_ok, probe_rej = _probe_backpressure(gw, rt)
+    report = await gw.drain(timeout=180.0)
+    s = report["summary"]
+    leaked = {k: v for k, v in report["leaked_pages"].items() if v}
+
+    # -- hard contracts (always asserted, chaos or not) -----------------
+    assert not leaked, f"KV pages leaked after graceful drain: {leaked}"
+    assert counts["error"] == 0, f"streams died without a terminal state: {counts}"
+    total = sum(counts[k] for k in
+                ("finished", "cancelled", "deadline", "rejected"))
+    assert total == n_streams, \
+        f"terminal-state partition broken: {counts} != {n_streams} streams"
+    # client-side terminals must reconcile with the runtime's counters
+    # (server-side extras: one warmup request + the admitted backpressure
+    # probes, all of which drain to completion)
+    srv_finished = s["online_finished"] + s["offline_finished"]
+    assert srv_finished == counts["finished"] + 1 + probe_ok, \
+        f"server finished {srv_finished} != client {counts['finished']} " \
+        f"+ warmup + {probe_ok} probes"
+    assert s["deadline_aborts"] == counts["deadline"], (s["deadline_aborts"], counts)
+    assert s["cancelled"] == counts["cancelled"], (s["cancelled"], counts)
+    assert s["rejected_online"] == counts["rejected"] + probe_rej, \
+        (s["rejected_online"], counts, probe_rej)
+    assert probe_rej >= 1, "backpressure probe never saw AdmissionRejected"
+    assert counts["loose_deadline_missed"] == 0, \
+        f"loose (300s) deadlines must be met: {counts}"
+    if chaos:
+        assert s["engine_crashes"] == 1, s["engine_crashes"]
+
+    out = {
+        "n_streams": n_streams,
+        "chaos": chaos,
+        **{k: counts[k] for k in
+           ("finished", "cancelled", "deadline", "rejected")},
+        "ttft_p99": s["online_ttft_p99"],
+        "tpot_p99": s["online_tpot_p99"],
+        "slo_attainment": s["online_slo_attainment"],
+        "recoveries": s["recoveries"],
+        "engine_crashes": s["engine_crashes"],
+        "leaked_pages": sum(report["leaked_pages"].values()),
+        "elapsed": s["elapsed"],
+    }
+    if verbose:
+        print(f"  {'chaos' if chaos else 'clean'}: {out}")
+    return out
+
+
+def run_gateway_load(quick: bool = False, chaos: bool = True,
+                     n_streams: int = 200, seed: int = 0,
+                     verbose: bool = True) -> dict:
+    """Clean run (always >= 200 streams — the acceptance floor) plus a
+    chaos run reusing the PR 6 fault plan. Returns both reports."""
+    bundle = _model_bundle()
+    max_new = 4 if quick else 6
+    clean = asyncio.run(_one_run(
+        bundle, n_streams=max(n_streams, 200), seed=seed, chaos=False,
+        max_new_tokens=max_new, verbose=verbose))
+    out = {"clean": clean}
+    if chaos:
+        out["chaos"] = asyncio.run(_one_run(
+            bundle, n_streams=80 if quick else max(n_streams, 200),
+            seed=seed + 1, chaos=True, max_new_tokens=max_new,
+            verbose=verbose))
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--no-chaos", action="store_true")
+    ap.add_argument("--streams", type=int, default=200)
+    args = ap.parse_args()
+    res = run_gateway_load(quick=args.quick, chaos=not args.no_chaos,
+                           n_streams=args.streams)
+    ok = all(r["leaked_pages"] == 0
+             and (r["ttft_p99"] or 0) <= SLO_TTFT
+             and (r["tpot_p99"] or 0) <= SLO_TPOT
+             for r in res.values())
+    print("PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -210,6 +210,31 @@ def bench_colocation(quick=False, gate=False):
              f"ooco_vs_best_baseline={ratio:.2f}x (paper: 1.17-3x)")
 
 
+def bench_gateway(quick=False, gate=False):
+    """Live-gateway load harness (PR 9): >= 200 concurrent streams with
+    seeded bursts, >= 10% mid-stream disconnects, a deadline mix, and a
+    deterministic backpressure probe — clean and chaos (relaxed-engine
+    crash) variants. The harness hard-asserts the terminal-state partition
+    and the zero-leak drain internally; with ``--gate`` the p99 SLO bounds
+    and leak counter additionally fail the run."""
+    from benchmarks.bench_gateway import SLO_TPOT, SLO_TTFT, run_gateway_load
+    t0 = time.perf_counter()
+    res = run_gateway_load(quick=quick, verbose=not quick)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(res), 1)
+    for name, r in res.items():
+        bad = gate and (r["leaked_pages"] > 0
+                        or (r["ttft_p99"] or 0) > SLO_TTFT
+                        or (r["tpot_p99"] or 0) > SLO_TPOT)
+        _row(f"gateway_{name}", us,
+             (f"ERROR leak/p99 gate (slo {SLO_TTFT}/{SLO_TPOT}s): "
+              if bad else "")
+             + f"streams={r['n_streams']} fin={r['finished']} "
+             f"cancel={r['cancelled']} deadline={r['deadline']} "
+             f"rej={r['rejected']} ttft_p99={r['ttft_p99']:.2f}s "
+             f"tpot_p99={r['tpot_p99']:.3f}s leaked={r['leaked_pages']} "
+             f"crashes={r['engine_crashes']} recoveries={r['recoveries']}")
+
+
 def bench_pool_ratio(quick=False):
     """Beyond-paper: sensitivity of max offline throughput to the
     relaxed:strict pool ratio (paper only evaluates 1+1)."""
@@ -253,6 +278,7 @@ BENCHES = {
     "decode_hotpath": bench_decode_hotpath,
     "perfmodel_accuracy": bench_perfmodel_accuracy,
     "colocation": bench_colocation,
+    "gateway": bench_gateway,
     "pool_ratio": bench_pool_ratio,
 }
 
@@ -271,7 +297,7 @@ def main() -> int:
             continue
         kw = ({"gate": args.gate}
               if name in ("engine_throughput", "decode_hotpath",
-                          "colocation") else {})
+                          "colocation", "gateway") else {})
         try:
             fn(quick=args.quick, **kw)
         except Exception as e:  # keep the harness running

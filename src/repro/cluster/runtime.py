@@ -83,12 +83,22 @@ def replay_hw() -> HardwareParams:
 # ---------------------------------------------------------------------------
 
 class WallClock:
-    """Live-serving clock: real time, bounded sleep when idle."""
+    """Live-serving clock: real time, bounded sleep when idle.
+
+    ``interrupt`` (an optional ``threading.Event``) makes idle sleeps
+    responsive to live signals: the gateway sets it on submit / cancel /
+    shutdown so a long idle gap never delays reacting to a client by more
+    than one slice. Without an event, plain ``time.sleep`` slices give the
+    same bounded-latency property to signal handlers."""
 
     virtual = False
 
-    def __init__(self):
+    #: max seconds one idle sleep may block before re-checking for signals
+    IDLE_SLICE = 0.005
+
+    def __init__(self, interrupt=None):
         self._t0 = time.perf_counter()
+        self.interrupt = interrupt
 
     def now(self) -> float:
         return time.perf_counter() - self._t0
@@ -102,11 +112,20 @@ class WallClock:
         self._t0 = time.perf_counter()
 
     def idle_until(self, t: float) -> None:
-        """Sleep toward t in bounded slices (the busy-loop fix: idle rounds
-        must not spin ``step()`` and dilute measured throughput)."""
-        delta = t - self.now()
-        if delta > 0:
-            time.sleep(min(delta, 0.05))
+        """Sleep toward t in small interruptible slices (the busy-loop fix:
+        idle rounds must not spin ``step()`` and dilute measured
+        throughput; the slice bound keeps cancel/shutdown latency under
+        ``IDLE_SLICE`` even across a long idle gap)."""
+        while True:
+            delta = t - self.now()
+            if delta <= 0:
+                return
+            nap = min(delta, self.IDLE_SLICE)
+            if self.interrupt is not None:
+                if self.interrupt.wait(nap):
+                    return  # woken by a live signal: let the caller react
+            else:
+                time.sleep(nap)
 
 
 class VirtualClock:
@@ -173,6 +192,10 @@ class Metrics:
     watchdog_aborts: int = 0       # stuck dispatches killed by the watchdog
     shed_requests: int = 0         # offline work shed under bounded backlog
     degraded_rounds: int = 0       # rounds run under overload admission
+    cancelled: int = 0             # client-cancelled requests (any stage)
+    deadline_aborts: int = 0       # requests aborted past their deadline
+    rejected_online: int = 0       # online submits bounced at admission
+    drained: int = 0               # requests finished during graceful drain
     prefill_modeled_seconds: float = 0.0  # modeled prefill compute (chunk-
                                    # only share of fused rounds) — the
                                    # denominator of effective prefill tok/s
@@ -182,10 +205,18 @@ def _pct(xs: list[float], q: float) -> float | None:
     return float(np.percentile(xs, q)) if xs else None
 
 
+class AdmissionRejected(RuntimeError):
+    """Online submit bounced by backpressure: the bounded online admission
+    queue is full. Raised synchronously from ``submit`` so the caller (the
+    gateway) can fail the client fast instead of letting an online flood
+    grow host state without bound. Offline floods degrade through the
+    existing defer/shed path (``admission_decision``) and never raise."""
+
+
 def _validate_runtime_args(*, policy, n_strict, n_relaxed, slo_ttft, slo_tpot,
                            num_pages, page_size, decode_horizon, max_horizon,
                            chunk_tokens, max_transfer_attempts,
-                           max_offline_backlog) -> None:
+                           max_offline_backlog, max_online_queue) -> None:
     """Constructor-time validation: reject impossible topologies, SLOs, and
     scheduling knobs with actionable ``ValueError``s instead of the index/
     shape errors they would otherwise become deep inside a replay."""
@@ -228,6 +259,9 @@ def _validate_runtime_args(*, policy, n_strict, n_relaxed, slo_ttft, slo_tpot,
     if max_offline_backlog is not None and max_offline_backlog < 0:
         raise ValueError("max_offline_backlog must be None or >= 0 "
                          f"(got {max_offline_backlog})")
+    if max_online_queue is not None and max_online_queue < 1:
+        raise ValueError("max_online_queue must be None (unbounded) or >= 1 "
+                         f"(got {max_online_queue})")
 
 
 class PoolRuntime:
@@ -249,6 +283,7 @@ class PoolRuntime:
                  backoff_base: float = 0.05,
                  watchdog_mult: float = 10.0,
                  max_offline_backlog: int | None = None,
+                 max_online_queue: int | None = None,
                  prefix_cache: bool = True,
                  model=None, params=None,
                  kernels_from: ServingEngine | None = None):
@@ -258,7 +293,8 @@ class PoolRuntime:
             page_size=page_size, decode_horizon=decode_horizon,
             max_horizon=max_horizon, chunk_tokens=chunk_tokens,
             max_transfer_attempts=max_transfer_attempts,
-            max_offline_backlog=max_offline_backlog)
+            max_offline_backlog=max_offline_backlog,
+            max_online_queue=max_online_queue)
         self.cfg = cfg
         self.policy = policy
         # chunked-prefill token budget: "auto" = roofline-suggested per
@@ -337,6 +373,7 @@ class PoolRuntime:
         self.backoff_base = backoff_base
         self.watchdog_mult = watchdog_mult
         self.max_offline_backlog = max_offline_backlog
+        self.max_online_queue = max_online_queue
         # frontend request log: prompts survive engine crashes, so recovery
         # re-admits from here instead of reading dead-engine memory
         self.prompts: dict[int, list[int]] = {}
@@ -344,13 +381,54 @@ class PoolRuntime:
         self.dead_pool: list[EngineSlot] = []
         self._page_leases: list[tuple[EngineSlot, list[int], float]] = []
         self._admission = "admit"
+        # ---- live-serving lifecycle (gateway / PR 9) ----
+        self.by_rid: dict[int, Request] = {}   # every accepted submit, ever
+        self.cancelled: list[Request] = []     # terminal: client or deadline
+        self.rejected: list[Request] = []      # bounced at submit (terminal)
+        self._deadline_watch: list[Request] = []
+        self.draining = False   # graceful shutdown: finish residents, no SLA
+                                # change — only the `drained` counter
 
     # ------------------------------------------------------------------
     # submission + one co-located round
     # ------------------------------------------------------------------
     def submit(self, req: Request, tokens: list[int]) -> None:
+        """Accept a request into the frontend queues.
+
+        Validates up front — a malformed submit must fail HERE with a clear
+        error, not corrupt queue/engine state rounds later: empty prompts
+        would underflow the chunk scheduler, a length mismatch would trip an
+        engine assert mid-prefill, and a duplicate rid would silently alias
+        two requests' KV tables and token buffers. Online submits are
+        additionally bounded by ``max_online_queue`` (``AdmissionRejected``
+        — backpressure the caller sees synchronously)."""
+        if not tokens:
+            raise ValueError(f"submit of rid {req.rid}: empty token list "
+                             "(prompts must contain >= 1 token)")
+        if len(tokens) != req.prompt_len:
+            raise ValueError(
+                f"submit of rid {req.rid}: prompt_len={req.prompt_len} but "
+                f"{len(tokens)} tokens were provided")
+        if req.rid in self.by_rid:
+            raise ValueError(
+                f"submit of duplicate rid {req.rid} "
+                f"({self.by_rid[req.rid].phase.value}): rids are unique per "
+                "runtime; resubmission would alias KV tables")
+        if (req.kind == Kind.ONLINE and self.max_online_queue is not None
+                and len(self.online_queue) >= self.max_online_queue):
+            self.metrics.rejected_online += 1
+            req.phase = Phase.CANCELLED
+            req.cancel_reason = "rejected"
+            self.rejected.append(req)
+            raise AdmissionRejected(
+                f"online admission queue full "
+                f"({len(self.online_queue)}/{self.max_online_queue}); "
+                "retry later or shed load upstream")
+        self.by_rid[req.rid] = req
         self.all_requests.append(req)
         self.prompts[req.rid] = list(tokens)
+        if req.ttft_deadline is not None or req.total_deadline is not None:
+            self._deadline_watch.append(req)
         if req.kind == Kind.ONLINE:
             self.online_queue.append((req, tokens))
         else:
@@ -361,6 +439,7 @@ class PoolRuntime:
         engine did work; virtual mode advances the clock by the modeled
         round duration (max across engines — pools run in parallel)."""
         now = self.clock.now()
+        self._enforce_deadlines(now)
         self._apply_faults(now)
         self._admission = self._admission_state()
         if self._admission != "admit":
@@ -376,6 +455,161 @@ class PoolRuntime:
             self.clock.advance(cost)
             return True
         return False
+
+    # ------------------------------------------------------------------
+    # live request lifecycle: cancel, deadlines, streaming, health, drain
+    # ------------------------------------------------------------------
+    def cancel(self, rid: int, *, reason: str = "client") -> Request:
+        """Abort a request at ANY lifecycle stage — queued, mid-chunked-
+        prefill, mid-decode, parked mid-migration — releasing every KV page
+        and refcount it held on every engine. Terminal and final: a
+        cancelled request is never re-admitted and bills no recompute waste
+        (nothing will re-run). Raises ``ValueError`` for unknown rids and
+        for requests already in a terminal state, so double-cancels and
+        cancel-after-finish are caller bugs, not silent no-ops."""
+        req = self.by_rid.get(rid)
+        if req is None:
+            raise ValueError(f"cancel of unknown rid {rid}: never submitted "
+                             "to this runtime (or rejected at admission)")
+        if req.phase is Phase.FINISHED:
+            raise ValueError(f"cancel of rid {rid}: already finished")
+        if req.phase is Phase.CANCELLED:
+            raise ValueError(f"cancel of rid {rid}: already cancelled "
+                             f"({req.cancel_reason})")
+        self._purge(req)
+        req.phase = Phase.CANCELLED
+        req.cancel_reason = reason
+        req.finish_time = self.clock.now()
+        self.cancelled.append(req)
+        if reason == "deadline":
+            self.metrics.deadline_aborts += 1
+        else:
+            self.metrics.cancelled += 1
+        return req
+
+    def _purge(self, req: Request) -> None:
+        """Remove every trace of a live request from the cluster: frontend
+        queues, slot resident lists, pinned prefills, parked placements,
+        and per-engine state/pages (``ServingEngine.release`` is idempotent
+        and stage-agnostic, so sweeping every slot is safe)."""
+        rid = req.rid
+        self.online_queue[:] = [e for e in self.online_queue
+                                if e[0].rid != rid]
+        self.offline_queue[:] = [e for e in self.offline_queue
+                                 if e[0].rid != rid]
+        self.place_queue[:] = [e for e in self.place_queue
+                               if e[0].rid != rid]
+        self._deadline_watch[:] = [r for r in self._deadline_watch
+                                   if r.rid != rid]
+        for slot in self.strict_pool + self.relaxed_pool:
+            slot.prefilling[:] = [e for e in slot.prefilling
+                                  if e[0].rid != rid]
+            slot.online[:] = [r for r in slot.online if r.rid != rid]
+            slot.offline[:] = [r for r in slot.offline if r.rid != rid]
+            slot.engine.release(rid)
+        self.prompts.pop(rid, None)   # cancelled work is never recovered
+
+    def _enforce_deadlines(self, now: float) -> None:
+        """Abort watched requests whose TTFT/total deadline has passed
+        (``core.scheduling.deadline_state``). Runs at the top of every
+        round, BEFORE admission/prefill — a blown request must not steal
+        another FLOP from requests that can still meet their SLOs. Aborts
+        count in ``deadline_aborts`` and are billed as SLO violations in
+        ``summary()``, never as attainment."""
+        if not self._deadline_watch:
+            return
+        for req in list(self._deadline_watch):
+            if req.phase in (Phase.FINISHED, Phase.CANCELLED) or req.done:
+                self._deadline_watch.remove(req)
+                continue
+            if sch.deadline_state(req, now) != "ok":
+                self.cancel(req.rid, reason="deadline")  # unwatches via purge
+
+    def generated_tokens(self, rid: int) -> list[int]:
+        """Output tokens produced so far for ``rid`` — the gateway's
+        streaming poll. Reads the resident engine's token ring (finished
+        requests read the frontend copy), clamped to ``req.generated`` so
+        eviction/crash recovery is invisible to the stream: greedy replay
+        regenerates bit-identical tokens, and until progress catches back
+        up to the client's emit offset the poll simply returns a prefix it
+        has already seen. Empty for unknown/rejected rids."""
+        req = self.by_rid.get(rid)
+        if req is None:
+            return []
+        final = self.tokens.get(rid)
+        if final is not None:
+            return final[req.prompt_len:]
+        if req.generated <= 0:
+            return []
+        for slot in self.strict_pool + self.relaxed_pool:
+            buf = slot.engine.token_buf.get(rid)
+            if buf is not None:
+                return buf[req.prompt_len: req.prompt_len + req.generated]
+        return []
+
+    def health(self) -> dict:
+        """Cluster health probe for the gateway's ``/healthz``: per-slot
+        liveness and page occupancy plus the PR 6 crash/watchdog counters.
+        ``status`` is ``"ok"`` (full topology), ``"degraded"`` (crashed
+        engines or a promoted/emptied pool — still serving), or ``"dead"``
+        (no live engine; nothing can be served)."""
+        slots = []
+        for s in self.strict_pool + self.relaxed_pool + self.dead_pool:
+            eng = s.engine
+            slots.append({
+                "name": s.name,
+                "role": s.role,
+                "alive": eng.alive,
+                "resident": s.resident,
+                "prefilling": len(s.prefilling),
+                "free_pages": eng.cache.allocator.free_pages if eng.alive else 0,
+                "live_pages": eng.cache.allocator.live_pages if eng.alive else 0,
+            })
+        n_live = len(self.strict_pool) + len(self.relaxed_pool)
+        if n_live == 0:
+            status = "dead"
+        elif (self.dead_pool or not self.strict_pool
+              or not self.relaxed_pool):
+            status = "degraded"
+        else:
+            status = "ok"
+        return {
+            "status": status,
+            "draining": self.draining,
+            "engines": slots,
+            "queued_online": len(self.online_queue),
+            "queued_offline": len(self.offline_queue),
+            "engine_crashes": self.metrics.engine_crashes,
+            "watchdog_aborts": self.metrics.watchdog_aborts,
+            "promotions": self.metrics.promotions,
+            "degraded_rounds": self.metrics.degraded_rounds,
+        }
+
+    def live_pages(self) -> dict[str, int]:
+        """Allocator-held pages per live engine — the drain-time leak
+        probe: after a graceful drain releases residents, leases, and the
+        prefix trees, every count here must be zero."""
+        return {s.name: s.engine.cache.allocator.live_pages
+                for s in self.strict_pool + self.relaxed_pool}
+
+    def release_retained(self) -> int:
+        """Final step of a graceful drain: return pages that are held on
+        purpose rather than by an in-flight request — outstanding fault-
+        injection page leases and the radix prefix trees' own references
+        (``release_all``: a decref per node, unlike the crash path's
+        ``clear``). Returns the number of page references released; after
+        this, any nonzero ``live_pages()`` entry is a genuine leak."""
+        released = 0
+        for lease in list(self._page_leases):
+            slot, pages, _ = lease
+            self._page_leases.remove(lease)
+            if slot.engine.alive:
+                slot.engine.cache.allocator.free(pages)
+                released += len(pages)
+        for s in self.strict_pool + self.relaxed_pool:
+            if s.engine.cache.prefix is not None:
+                released += s.engine.cache.prefix.release_all()
+        return released
 
     # ------------------------------------------------------------------
     # fault injection + recovery (chaos replay)
@@ -1272,6 +1506,8 @@ class PoolRuntime:
         req.finish_time = t
         self.tokens[req.rid] = eng.token_buf[req.rid].tolist()
         self.finished.append(req)
+        if self.draining:
+            self.metrics.drained += 1
 
     # ------------------------------------------------------------------
     # trace-driven event loop
@@ -1339,12 +1575,21 @@ class PoolRuntime:
         preemption/migration/eviction counters — the policy-comparison
         record (deterministic under the virtual clock: no wall times)."""
         elapsed = max(self.clock.now(), 1e-9)
-        online = [r for r in self.all_requests if r.kind == Kind.ONLINE]
+        # SLO accounting under live lifecycles: a CLIENT-cancelled request
+        # leaves the attainment denominator (the server cannot violate an
+        # SLO the client walked away from), but a DEADLINE abort is always
+        # billed as a violation — a deadline miss must never launder itself
+        # into attainment by being aborted.
+        online = [r for r in self.all_requests if r.kind == Kind.ONLINE
+                  and not (r.phase is Phase.CANCELLED
+                           and r.cancel_reason != "deadline")]
         offline = [r for r in self.all_requests if r.kind == Kind.OFFLINE]
         ttfts = [r.ttft() for r in online if r.ttft() is not None]
         tpots = [r.avg_tpot() for r in online if r.avg_tpot() is not None]
         viol = sum(1 for r in online
-                   if r.violates(self.slo_ttft, self.slo_tpot, now=elapsed))
+                   if (r.phase is Phase.CANCELLED
+                       and r.cancel_reason == "deadline")
+                   or r.violates(self.slo_ttft, self.slo_tpot, now=elapsed))
         off_tokens = int(sum(r.generated for r in offline))
         # §3.4.1 preemptions: layer-level interruptions (legacy path) plus
         # chunk-boundary pauses of in-progress offline prefills
@@ -1416,6 +1661,13 @@ class PoolRuntime:
             "watchdog_aborts": self.metrics.watchdog_aborts,
             "shed_requests": self.metrics.shed_requests,
             "degraded_rounds": self.metrics.degraded_rounds,
+            # live lifecycle (gateway): every submitted request ends in
+            # exactly one terminal state — finished, cancelled (client),
+            # deadline-aborted, rejected at admission, or shed
+            "cancelled": self.metrics.cancelled,
+            "deadline_aborts": self.metrics.deadline_aborts,
+            "rejected_online": self.metrics.rejected_online,
+            "drained": self.metrics.drained,
         }
 
     def finished_signature(self) -> list[tuple]:

@@ -19,6 +19,7 @@ class Phase(str, Enum):
     DECODING = "decoding"
     EVICTED = "evicted"     # must re-prefill (recompute) before decoding again
     FINISHED = "finished"
+    CANCELLED = "cancelled"  # terminal: client abort or deadline exceeded
 
 
 _ids = itertools.count()
@@ -31,6 +32,10 @@ class Request:
     prompt_len: int
     output_len: int                  # ground-truth tokens to generate
     rid: int = field(default_factory=lambda: next(_ids))
+
+    # --- client-visible lifecycle limits (seconds relative to arrival) ---
+    ttft_deadline: float | None = None   # abort if no first token by then
+    total_deadline: float | None = None  # abort if not finished by then
 
     # --- runtime state ---
     phase: Phase = Phase.QUEUED
@@ -46,6 +51,7 @@ class Request:
     decode_time_sum: float = 0.0     # accumulated decode step latencies
     evictions: int = 0
     recompute_tokens: int = 0        # wasted prefill tokens from evictions
+    cancel_reason: str | None = None  # "client" | "deadline" once CANCELLED
 
     @property
     def context_len(self) -> int:

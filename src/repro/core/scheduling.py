@@ -413,6 +413,30 @@ def admission_decision(
 
 
 # ---------------------------------------------------------------------------
+# Live-serving deadlines (gateway / PR 9)
+# ---------------------------------------------------------------------------
+
+def deadline_state(req: Request, now: float) -> str:
+    """Classify a live request against its client deadlines: ``"ok"`` |
+    ``"ttft_blown"`` | ``"total_blown"``.
+
+    Pure decision function (the runtime loop enforces the abort): a request
+    whose TTFT deadline passed while it was still waiting for its first
+    token, or whose total deadline passed before it finished, is not worth
+    another FLOP — prefilling or decoding it only steals budget from
+    requests that can still meet their SLOs. Deadlines are seconds relative
+    to arrival; ``None`` means unbounded."""
+    elapsed = now - req.arrival
+    if (req.total_deadline is not None and not req.done
+            and elapsed > req.total_deadline):
+        return "total_blown"
+    if (req.ttft_deadline is not None and req.first_token_time is None
+            and elapsed > req.ttft_deadline):
+        return "ttft_blown"
+    return "ok"
+
+
+# ---------------------------------------------------------------------------
 # §3.4.2  Offline Request Gating (cost model)
 # ---------------------------------------------------------------------------
 

@@ -1073,13 +1073,35 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def evict(self, rid: int) -> None:
         """Evict a decoding request (offline victim): free pages; it must
-        re-prefill (recompute) later."""
+        re-prefill (recompute) later. Prefix-cache claims were a page-table
+        update, not compute — like ``abort_prefill``/``_readmit``, losing
+        them wastes no FLOPs, so only context beyond the claimed prefix
+        counts as recompute."""
         req = self.requests[rid]
-        req.recompute_tokens += req.context_len
+        req.recompute_tokens += max(req.context_len - req.cached_tokens, 0)
         req.evictions += 1
         req.phase = Phase.EVICTED
         self.cache.free(rid)
         self.stats.evictions += 1
+
+    def release(self, rid: int) -> None:
+        """Drop EVERY trace of a request from this engine — the cancel
+        path. Idempotent and stage-agnostic: safe whether the request is
+        mid-chunked-prefill, mid-legacy-prefill, decoding, already finished
+        (pages freed by ``_decode_finish``), or unknown here. Unlike
+        ``abort_prefill``/``evict`` it bills no recompute waste (a
+        cancelled request will never re-run) and never raises on absent
+        state, so the runtime can call it on every slot it might have
+        touched. No-op on a crashed engine (its state is already gone)."""
+        self.partial.pop(rid, None)
+        self.chunk_state.pop(rid, None)
+        self.req_sampling.pop(rid, None)
+        self.requests.pop(rid, None)
+        self.token_buf.pop(rid, None)
+        if rid in self.cache.tables:
+            self.cache.free(rid)
+        else:
+            self.cache.lengths.pop(rid, None)
 
     def migrate_out(self, rid: int):
         """Export KV for migration to another engine (RDMA->ICI analogue)."""

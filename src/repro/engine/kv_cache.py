@@ -294,6 +294,22 @@ class RadixPrefixCache:
         (recovery recomputes from the frontend prompt log)."""
         self.root = _PrefixNode((), None, None, 0)
 
+    def release_all(self) -> int:
+        """Drop the whole tree and RELEASE the tree's reference on every
+        node page — the graceful-drain path, where the allocator stays
+        authoritative and must end with zero live pages. Returns the number
+        of references released. (Contrast ``clear``, which abandons the
+        refcounts because the crashed pool is being discarded wholesale.)"""
+        released = 0
+        stack = list(self.root.children.values())
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            self.allocator.free([node.page])
+            released += 1
+        self.root = _PrefixNode((), None, None, 0)
+        return released
+
 
 @dataclass
 class PagedKVCache:

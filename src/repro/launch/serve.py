@@ -158,6 +158,10 @@ def main(argv=None):
                     help="seed for the fault injector's RNG (flaky-transfer "
                          "coin flips, retry-backoff jitter); replays with "
                          "the same seed are bit-reproducible")
+    ap.add_argument("--max-online-queue", type=int, default=None,
+                    help="bounded online admission queue: overflowing "
+                         "submits raise AdmissionRejected (backpressure) "
+                         "instead of growing host state without bound")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
@@ -175,7 +179,8 @@ def main(argv=None):
                           decode_horizon=horizon,
                           prefix_cache=args.prefix_cache == "on",
                           fault_plan=args.fault_plan,
-                          chaos_seed=args.chaos_seed)
+                          chaos_seed=args.chaos_seed,
+                          max_online_queue=args.max_online_queue)
     online, offline = build_traces(args, cfg)
     summary = runtime.run(online, offline, duration=args.duration,
                           max_prompt=args.max_prompt,

@@ -30,7 +30,7 @@ from repro.cluster.faults import FaultEvent, FaultInjector, FaultPlan
 from repro.cluster.runtime import PoolRuntime, VirtualClock, replay_hw
 from repro.configs import get_config
 from repro.core import scheduling as sch
-from repro.core.request import Kind, Request
+from repro.core.request import Kind, Phase, Request
 from repro.data import traces as tr
 from repro.engine.engine import EngineCrashedError, ServingEngine
 from repro.engine.kv_cache import (TransferIntegrityError, transfer_checksum,
@@ -390,16 +390,19 @@ class TestProperties:
     @given(data=st.data())
     @settings(max_examples=25, deadline=None)
     def test_no_request_silently_dropped(self, built, data):
-        """Across any interleaving of abort/re-admit cycles and shedding,
-        every submitted request is in exactly one place: a queue or the
-        (surfaced) shed list — never lost, never duplicated."""
+        """Across any interleaving of abort/re-admit cycles, shedding, and
+        client cancellation, every submitted request is in exactly one
+        place: a queue, the (surfaced) shed list, or the cancelled list —
+        never lost, never duplicated."""
         rt = _prop_rt(built)
         rt.online_queue.clear()
         rt.offline_queue.clear()
         rt.shed.clear()
+        rt.cancelled.clear()
         rt.prompts.clear()
         rt.all_requests.clear()
         rt.metrics.shed_requests = 0
+        rt.metrics.cancelled = 0
         rt.max_offline_backlog = data.draw(
             st.one_of(st.none(), st.integers(0, 4)))
         reqs = []
@@ -409,11 +412,16 @@ class TestProperties:
             rt.submit(r, [0] * 8)
             reqs.append(r)
         for _ in range(data.draw(st.integers(0, 15))):
-            if data.draw(st.booleans()) and rt.max_offline_backlog is not None:
+            action = data.draw(st.sampled_from(["shed", "cancel", "readmit"]))
+            if action == "shed" and rt.max_offline_backlog is not None:
                 rt._shed_offline()
                 continue
             pool = rt.offline_queue if rt.offline_queue else rt.online_queue
             if not pool:
+                continue
+            if action == "cancel":
+                entry = pool[data.draw(st.integers(0, len(pool) - 1))]
+                rt.cancel(entry[0].rid)
                 continue
             entry = pool.pop(data.draw(st.integers(0, len(pool) - 1)))
             req = entry[0]
@@ -424,8 +432,13 @@ class TestProperties:
         queued = ([e[0].rid for e in rt.online_queue]
                   + [e[0].rid for e in rt.offline_queue])
         shed = [r.rid for r in rt.shed]
-        assert sorted(queued + shed) == sorted(r.rid for r in reqs)
+        cancelled = [r.rid for r in rt.cancelled]
+        assert sorted(queued + shed + cancelled) \
+            == sorted(r.rid for r in reqs)
         assert rt.metrics.shed_requests == len(shed)
+        assert rt.metrics.cancelled == len(cancelled)
+        assert all(rt.by_rid[rid].phase is Phase.CANCELLED
+                   for rid in cancelled)
 
 
 _PROP_RT = []

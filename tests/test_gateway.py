@@ -1,0 +1,460 @@
+"""Live gateway suite (ISSUE 9): cancellation, deadlines, backpressure,
+health-checked drain, and the asyncio streaming front end.
+
+* ``PoolRuntime.submit`` validation — empty prompts, length mismatches,
+  duplicate rids fail loudly before touching engine state;
+* bounded online admission (``AdmissionRejected`` + ``rejected_online``),
+  with offline submits never subject to the online bound;
+* ``PoolRuntime.cancel`` at every lifecycle stage — queued, mid-chunked-
+  prefill, mid-decode, parked in ``place_queue`` — frees every KV page,
+  bills zero recompute, and leaves the runtime steppable; unknown /
+  double / after-finish cancels raise ``ValueError``;
+* TTFT/total deadlines enforced by the runtime loop under ``VirtualClock``
+  (deterministic), billed as SLO violations, never attainment — while
+  client cancels leave the SLO denominator entirely;
+* the ``evict`` recompute-accounting fix: prefix-cached tokens are a page
+  table update, not compute, so they never count as recompute waste;
+* interruptible ``WallClock.idle_until`` slices (the gateway's wake path);
+* the asyncio ``Gateway`` end to end on a wall clock with ``time.sleep``
+  monkeypatched out of idle slices: submit → stream → finish,
+  cancel-while-queued, mid-stream cancel, health probe, and a graceful
+  drain that ends with zero live pages on every engine.
+"""
+import asyncio
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.cluster.gateway import Gateway, GatewayClosed, TokenStream
+from repro.cluster.runtime import (AdmissionRejected, PoolRuntime,
+                                   VirtualClock, WallClock, replay_hw)
+from repro.configs import get_config
+from repro.core.request import Kind, Phase, Request
+from repro.models.model import build_model
+
+SLO_TTFT = 1.0
+SLO_TPOT = 0.030
+
+
+@pytest.fixture(scope="module")
+def built():
+    cfg = get_config("qwen2.5-7b").reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params, [None]   # last slot: shared kernel donor
+
+
+def _make_rt(built, *, num_pages=256, clock=None, **kw):
+    cfg, model, params, donor = built
+    kw.setdefault("policy", "ooco")
+    kw.setdefault("n_strict", 1)
+    kw.setdefault("n_relaxed", 1)
+    kw.setdefault("hw", replay_hw())
+    rt = PoolRuntime(cfg, clock=clock or VirtualClock(), backend="ref",
+                     num_pages=num_pages, page_size=8, slo_ttft=SLO_TTFT,
+                     slo_tpot=SLO_TPOT, model=model,
+                     params=params, kernels_from=donor[0], **kw)
+    donor[0] = donor[0] or rt.kernel_donor
+    return rt
+
+
+def _submit_online(rt, prompt_len=8, output_len=4, **kw):
+    req = Request(Kind.ONLINE, rt.clock.now(), prompt_len, output_len, **kw)
+    rt.submit(req, [1] * prompt_len)
+    return req
+
+
+def _step_until(rt, cond, max_steps=200):
+    for _ in range(max_steps):
+        if cond():
+            return True
+        rt.step()
+    return cond()
+
+
+def _total_live_pages(rt):
+    return sum(rt.live_pages().values())
+
+
+# ---------------------------------------------------------------------------
+# submit validation + backpressure
+# ---------------------------------------------------------------------------
+
+class TestSubmitValidation:
+    def test_empty_prompt_rejected(self, built):
+        rt = _make_rt(built)
+        req = Request(Kind.ONLINE, 0.0, 0, 4)
+        with pytest.raises(ValueError, match="empty token list"):
+            rt.submit(req, [])
+
+    def test_length_mismatch_rejected(self, built):
+        rt = _make_rt(built)
+        req = Request(Kind.ONLINE, 0.0, 8, 4)
+        with pytest.raises(ValueError, match="prompt_len=8 but 5 tokens"):
+            rt.submit(req, [1] * 5)
+
+    def test_duplicate_rid_rejected(self, built):
+        rt = _make_rt(built)
+        req = _submit_online(rt)
+        with pytest.raises(ValueError, match="duplicate rid"):
+            rt.submit(req, [1] * 8)
+        assert len(rt.online_queue) == 1   # first submit intact
+
+    def test_bad_max_online_queue_rejected(self, built):
+        with pytest.raises(ValueError, match="max_online_queue"):
+            _make_rt(built, max_online_queue=0)
+
+
+class TestBackpressure:
+    def test_online_overflow_raises_and_counts(self, built):
+        rt = _make_rt(built, max_online_queue=2)
+        a, b = _submit_online(rt), _submit_online(rt)
+        with pytest.raises(AdmissionRejected, match="admission queue full"):
+            _submit_online(rt)
+        assert rt.metrics.rejected_online == 1
+        rejected = rt.rejected[0]
+        assert rejected.phase is Phase.CANCELLED
+        assert rejected.cancel_reason == "rejected"
+        # the rejected request left no state behind: not queued, not known
+        assert {e[0].rid for e in rt.online_queue} == {a.rid, b.rid}
+        assert rejected.rid not in rt.by_rid
+        assert rt.summary()["rejected_online"] == 1
+
+    def test_offline_not_bounded_by_online_queue(self, built):
+        rt = _make_rt(built, max_online_queue=1)
+        _submit_online(rt)
+        off = Request(Kind.OFFLINE, 0.0, 8, 4)
+        rt.submit(off, [1] * 8)   # must not raise
+        assert len(rt.offline_queue) == 1
+
+    def test_queue_drain_reopens_admission(self, built):
+        rt = _make_rt(built, max_online_queue=1)
+        first = _submit_online(rt)
+        with pytest.raises(AdmissionRejected):
+            _submit_online(rt)
+        assert _step_until(rt, lambda: not rt.online_queue)
+        second = _submit_online(rt)   # space again once scheduled
+        assert second.rid in rt.by_rid
+        assert first.rid in rt.by_rid
+
+
+# ---------------------------------------------------------------------------
+# cancellation at every lifecycle stage
+# ---------------------------------------------------------------------------
+
+class TestCancel:
+    def test_unknown_rid(self, built):
+        rt = _make_rt(built)
+        with pytest.raises(ValueError, match="unknown rid"):
+            rt.cancel(10**9)
+
+    def test_cancel_while_queued(self, built):
+        rt = _make_rt(built)
+        req = _submit_online(rt)
+        out = rt.cancel(req.rid)
+        assert out is req and req.phase is Phase.CANCELLED
+        assert req.cancel_reason == "client"
+        assert not rt.online_queue and req.rid not in rt.prompts
+        assert rt.metrics.cancelled == 1
+        assert _total_live_pages(rt) == 0
+
+    def test_double_cancel_and_cancel_after_finish(self, built):
+        rt = _make_rt(built)
+        req = _submit_online(rt)
+        rt.cancel(req.rid)
+        with pytest.raises(ValueError, match="already cancelled"):
+            rt.cancel(req.rid)
+        done = _submit_online(rt)
+        assert _step_until(rt, lambda: done.phase is Phase.FINISHED)
+        with pytest.raises(ValueError, match="already finished"):
+            rt.cancel(done.rid)
+
+    def test_cancel_mid_chunked_prefill(self, built):
+        """Cancel between chunk boundaries: the pinned chunk state and its
+        partially-filled pages vanish, no recompute is billed (nothing will
+        re-run), and the runtime keeps stepping normally."""
+        rt = _make_rt(built, chunk_tokens=16)
+        slot = rt.relaxed_pool[0]
+        req = Request(Kind.ONLINE, 0.0, 48, 4)
+        toks = [1] * 48
+        rt.submit(req, toks)
+        rt.online_queue.pop()              # simulate chunk admission...
+        slot.engine.add_request(req, toks)
+        slot.prefilling.append((req, toks))
+        slot.engine.mixed_step([], req.rid, 16)   # ...land exactly 1 chunk
+        assert slot.engine.prefill_progress(req.rid) == 16
+        assert _total_live_pages(rt) > 0
+        rt.cancel(req.rid)
+        assert req.rid not in slot.engine.chunk_state
+        assert not slot.prefilling
+        assert req.recompute_tokens == 0
+        assert _total_live_pages(rt) == 0
+        other = _submit_online(rt)   # the pool is still serviceable
+        assert _step_until(rt, lambda: other.phase is Phase.FINISHED)
+
+    def test_cancel_mid_decode(self, built):
+        rt = _make_rt(built)
+        req = _submit_online(rt, output_len=32)
+        assert _step_until(rt, lambda: 0 < req.generated < req.output_len)
+        rt.cancel(req.rid)
+        assert req.phase is Phase.CANCELLED
+        assert req.recompute_tokens == 0
+        rt.release_retained()   # drop the prefix tree's own page refs
+        assert _total_live_pages(rt) == 0
+        assert all(req.rid not in s.engine.requests
+                   for s in rt.strict_pool + rt.relaxed_pool)
+
+    def test_cancel_parked_migration(self, built):
+        """A request parked in ``place_queue`` (its migration destination
+        is retrying) cancels cleanly out of the parking lot."""
+        rt = _make_rt(built)
+        req = Request(Kind.OFFLINE, 0.0, 8, 4)
+        rt.submit(req, [1] * 8)
+        entry = rt.offline_queue.pop()
+        rt.place_queue.append((entry[0], rt.relaxed_pool[0]))
+        rt.cancel(req.rid)
+        assert not rt.place_queue
+        assert req.phase is Phase.CANCELLED
+        rt.step()   # no stale placement resurrects the request
+        assert req.rid not in {e[0].rid for e in rt.offline_queue}
+
+    def test_cancelled_excluded_from_slo_denominator(self, built):
+        rt = _make_rt(built)
+        done = _submit_online(rt)
+        gone = _submit_online(rt)
+        rt.cancel(gone.rid)
+        assert _step_until(rt, lambda: done.phase is Phase.FINISHED)
+        s = rt.summary()
+        assert s["online_requests"] == 1       # client cancels don't count
+        assert s["cancelled"] == 1
+
+
+# ---------------------------------------------------------------------------
+# deadlines (deterministic under VirtualClock)
+# ---------------------------------------------------------------------------
+
+class TestDeadlines:
+    def test_total_deadline_aborts_and_bills_violation(self, built):
+        rt = _make_rt(built)
+        req = _submit_online(rt, output_len=512, total_deadline=0.05)
+        assert _step_until(rt, lambda: req.phase is Phase.CANCELLED)
+        assert req.cancel_reason == "deadline"
+        assert rt.metrics.deadline_aborts == 1
+        rt.release_retained()   # drop the prefix tree's own page refs
+        assert _total_live_pages(rt) == 0
+        s = rt.summary()
+        assert s["deadline_aborts"] == 1
+        assert s["online_requests"] == 1       # stays in the denominator...
+        assert s["online_slo_attainment"] == 0.0   # ...as a violation
+
+    def test_ttft_deadline_aborts_queued_request(self, built):
+        rt = _make_rt(built)
+        # park it behind an empty round so the clock moves past the deadline
+        req = _submit_online(rt, ttft_deadline=0.01)
+        rt.online_queue.clear()            # starved: never scheduled
+        rt.clock.advance(0.02)
+        rt.step()
+        assert req.phase is Phase.CANCELLED
+        assert req.cancel_reason == "deadline"
+
+    def test_loose_deadline_finishes_normally(self, built):
+        rt = _make_rt(built)
+        req = _submit_online(rt, total_deadline=60.0, ttft_deadline=30.0)
+        assert _step_until(rt, lambda: req.phase is Phase.FINISHED)
+        assert rt.metrics.deadline_aborts == 0
+        assert rt.summary()["deadline_aborts"] == 0
+
+
+# ---------------------------------------------------------------------------
+# evict accounting fix (satellite: abort-path double-count sweep)
+# ---------------------------------------------------------------------------
+
+class TestEvictAccounting:
+    def test_evict_bills_only_uncached_context(self, built):
+        rt = _make_rt(built)
+        slot = rt.relaxed_pool[0]
+        req = Request(Kind.OFFLINE, 0.0, 16, 8)
+        rt.submit(req, [1] * 16)
+        rt.offline_queue.clear()
+        slot.engine.add_request(req, [1] * 16)
+        slot.engine.prefill(req.rid)
+        req.generated = 4
+        req.cached_tokens = 10           # prefix-cache claim: free to redo
+        slot.engine.evict(req.rid)
+        assert req.recompute_tokens == req.context_len - 10
+        slot.engine.release(req.rid)
+
+    def test_evict_never_bills_negative(self, built):
+        rt = _make_rt(built)
+        slot = rt.relaxed_pool[0]
+        req = Request(Kind.OFFLINE, 0.0, 8, 4)
+        rt.submit(req, [1] * 8)
+        rt.offline_queue.clear()
+        slot.engine.add_request(req, [1] * 8)
+        slot.engine.prefill(req.rid)
+        req.cached_tokens = req.context_len + 5   # clamp, don't go negative
+        slot.engine.evict(req.rid)
+        assert req.recompute_tokens == 0
+        slot.engine.release(req.rid)
+
+
+# ---------------------------------------------------------------------------
+# interruptible wall-clock idle
+# ---------------------------------------------------------------------------
+
+class TestWallClockInterrupt:
+    def test_idle_until_wakes_on_interrupt(self):
+        ev = threading.Event()
+        clock = WallClock(interrupt=ev)
+        threading.Timer(0.02, ev.set).start()
+        t0 = time.perf_counter()
+        clock.idle_until(clock.now() + 30.0)   # would block without the event
+        assert time.perf_counter() - t0 < 5.0
+
+    def test_idle_until_sleeps_in_slices(self, monkeypatch):
+        naps = []
+        monkeypatch.setattr(time, "sleep", lambda s: naps.append(s))
+        clock = WallClock()
+        target = clock.now() + 10 * WallClock.IDLE_SLICE
+        deadline = time.perf_counter() + 5.0
+        while clock.now() < target and time.perf_counter() < deadline:
+            clock.idle_until(target)
+        assert naps and max(naps) <= WallClock.IDLE_SLICE + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# the asyncio gateway, end to end (wall clock, sleep-free idle slices)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def quiet_sleep(monkeypatch):
+    """Make idle slices yield instead of sleeping so the wall-clock suite
+    is fast and scheduling-noise-free; correctness must not depend on
+    real sleep durations anywhere in the stack."""
+    monkeypatch.setattr(WallClock, "IDLE_SLICE", 0.0005)
+
+
+def _wall_rt(built, **kw):
+    return _make_rt(built, clock=WallClock(), hw=None, **kw)
+
+
+class TestGateway:
+    def test_rejects_virtual_clock(self, built):
+        with pytest.raises(ValueError, match="WallClock"):
+            Gateway(_make_rt(built))
+
+    def test_submit_stream_finish_and_drain(self, built, quiet_sleep):
+        async def run():
+            rt = _wall_rt(built)
+            gw = Gateway(rt)
+            await gw.start()
+            stream = await gw.submit(list(range(1, 9)), max_new_tokens=6)
+            assert isinstance(stream, TokenStream)
+            toks = [t async for t in stream]
+            assert stream.outcome == "finished"
+            assert len(toks) == 6
+            assert toks == rt.generated_tokens(stream.rid)
+            report = await gw.drain(timeout=30.0)
+            assert all(v == 0 for v in report["leaked_pages"].values())
+            assert report["summary"]["online_finished"] == 1
+            with pytest.raises(GatewayClosed):
+                await gw.submit([1, 2, 3])
+        asyncio.run(run())
+
+    def test_cancel_while_queued_closes_stream(self, built, quiet_sleep):
+        async def run():
+            rt = _wall_rt(built)
+            gw = Gateway(rt)
+            # admit before the runtime thread exists: the request is
+            # provably still queued when the cancel lands (deterministic)
+            gw._loop = asyncio.get_running_loop()
+            gw._accepting = True
+            stream = await gw.submit(list(range(1, 9)), max_new_tokens=8)
+            assert len(rt.online_queue) == 1
+            assert await stream.cancel()
+            toks = [t async for t in stream]
+            assert toks == [] and stream.outcome == "cancelled"
+            assert not rt.online_queue
+            await gw.start()
+            report = await gw.drain(timeout=30.0)
+            assert all(v == 0 for v in report["leaked_pages"].values())
+            assert report["summary"]["cancelled"] == 1
+        asyncio.run(run())
+
+    def test_cancel_mid_stream_and_health(self, built, quiet_sleep):
+        async def run():
+            rt = _wall_rt(built)
+            gw = Gateway(rt)
+            await gw.start()
+            health = gw.health()
+            assert health["status"] == "ok" and health["accepting"]
+            stream = await gw.submit(list(range(1, 9)), max_new_tokens=64)
+            async for _ in stream:
+                break                      # first token, then walk away
+            cancelled = await stream.cancel()
+            async for _ in stream:         # drain to the terminal event
+                pass
+            if cancelled:
+                assert stream.outcome == "cancelled"
+            else:                          # benign race: already finished
+                assert stream.outcome == "finished"
+            assert await gw.cancel(stream.rid) is False   # idempotent
+            report = await gw.drain(timeout=30.0)
+            assert all(v == 0 for v in report["leaked_pages"].values())
+            assert not gw.health()["accepting"]
+        asyncio.run(run())
+
+    def test_concurrent_streams_partition_and_zero_leak(self, built,
+                                                       quiet_sleep):
+        async def run():
+            rt = _wall_rt(built, max_online_queue=64)
+            gw = Gateway(rt)
+            await gw.start()
+
+            async def client(i):
+                kw = {"max_new_tokens": 4}
+                if i % 4 == 1:
+                    kw["total_deadline"] = 120.0
+                kind = Kind.OFFLINE if i % 4 == 2 else Kind.ONLINE
+                stream = await gw.submit([i + 1] * 8, kind=kind, **kw)
+                if i % 4 == 3:
+                    if await stream.cancel():
+                        return "cancelled"
+                async for _ in stream:
+                    pass
+                return stream.outcome
+
+            outcomes = await asyncio.gather(*(client(i) for i in range(12)))
+            assert all(o in ("finished", "cancelled") for o in outcomes)
+            report = await gw.drain(timeout=60.0)
+            s = report["summary"]
+            assert all(v == 0 for v in report["leaked_pages"].values())
+            n_cancel = outcomes.count("cancelled")
+            assert s["cancelled"] == n_cancel
+            assert (s["online_finished"] + s["offline_finished"]
+                    == 12 - n_cancel)
+            assert s["deadline_aborts"] == 0
+        asyncio.run(run())
+
+    def test_runtime_crash_surfaces_as_error_outcome(self, built,
+                                                     quiet_sleep):
+        async def run():
+            rt = _wall_rt(built)
+            gw = Gateway(rt)
+            # park the submit first so the stream exists before the crash
+            gw._loop = asyncio.get_running_loop()
+            gw._accepting = True
+            stream = await gw.submit(list(range(1, 9)), max_new_tokens=4)
+
+            def boom():
+                raise RuntimeError("injected scheduler bug")
+            rt.step = boom
+            await gw.start()
+            toks = [t async for t in stream]
+            assert toks == [] and stream.outcome == "error"
+            assert gw.health()["status"] == "dead"
+            assert "injected scheduler bug" in gw.health()["gateway_error"]
+            await gw.stop()
+        asyncio.run(run())
