@@ -21,6 +21,13 @@ Validates the zero-copy decode hot path four ways:
   plus the roofline-suggested K (``PerfModel.suggest_decode_horizon`` fed
   the measured per-dispatch overhead). The K=16-vs-K=1 ratio is the
   regression gate recorded in ``BENCH_engine.json``.
+* **mixed-horizon amortization** (``run_mixed_horizon_amortization``) —
+  tokens/s of the fused mixed-horizon dispatch (K decode iterations + K
+  prefill sub-chunk slices, one host sync) vs K serial ``mixed_step``
+  calls at identical per-iteration work, with bit-exact greedy parity
+  asserted across every K, one-sync-per-dispatch counted from EngineStats,
+  and the donation proof of the fused scan. ``fused_speedup`` (K=16 vs
+  serial) is the second regression gate in ``BENCH_engine.json``.
 
 Usage: PYTHONPATH=src python -m benchmarks.run --only decode_hotpath [--quick]
 """
@@ -73,6 +80,25 @@ def lower_horizon_step(eng: ServingEngine, *, bucket: int = 8, pages: int = 8,
         eng.cache.k_pool, eng.cache.v_pool, jnp.ones((bucket,), jnp.int32),
         jax.random.PRNGKey(0), jnp.int32(1),
         jnp.zeros((bucket,), jnp.float32), jnp.zeros((bucket,), jnp.int32))
+
+
+def lower_mixed_horizon_step(eng: ServingEngine, *, bucket: int = 2,
+                             pages: int = 8, chunk_bucket: int = 8,
+                             chunk_pages: int = 8, steps: int = 4):
+    """Lower the jitted K-step fused mixed-horizon scan for shape-only
+    inspection."""
+    fn = eng._mixed_horizon_fn(bucket, pages, chunk_bucket, chunk_pages,
+                               steps)
+    zi = jnp.zeros((bucket,), jnp.int32)
+    return fn.lower(
+        eng.params, zi, zi, jnp.zeros((bucket, pages), jnp.int32),
+        eng.cache.k_pool, eng.cache.v_pool, jnp.ones((bucket,), jnp.int32),
+        jnp.zeros((steps, chunk_bucket), jnp.int32),
+        jnp.zeros((steps, 2), jnp.int32),
+        jnp.zeros((chunk_pages,), jnp.int32),
+        jax.random.PRNGKey(0), jnp.int32(1),
+        jnp.zeros((bucket + 1,), jnp.float32),
+        jnp.zeros((bucket + 1,), jnp.int32))
 
 
 def donation_report(lowered, pool_shape) -> dict:
@@ -269,4 +295,133 @@ def run_horizon_amortization(arch="qwen2.5-7b", batch=2, prompt_len=32,
               f"suggested K={suggested} -> {out['chosen_speedup']:.2f}x vs K=1"
               f"{k16}; horizon donation "
               f"{hz['donated_args']} aliased / {hz['full_pool_copies']} copies")
+    return out
+
+
+def run_mixed_horizon_amortization(arch="qwen2.5-7b", batch=2, prompt_len=32,
+                                   sub_tokens=8, ks=(1, 4, 16),
+                                   total_steps=64, backend="auto", seed=0,
+                                   verbose=True):
+    """Fused mixed-horizon amortization: a decode batch rides K iterations
+    in ONE dispatch while a long offline prefill lands as K fixed-size
+    sub-chunk slices of the same dispatch.  K=1 is today's serial
+    ``mixed_step`` (one host sync per sub-chunk); K>1 is
+    ``mixed_horizon`` (one sync per K).  The per-iteration work is held
+    constant — every variant lands ``sub_tokens`` prompt tokens and one
+    decode token per resident per iteration — so the K=16-vs-K=1 ratio
+    isolates dispatch+sync amortization.  Greedy token streams are
+    asserted bit-identical across every K (the engine's parity contract)
+    and host syncs are counted: exactly one per dispatch."""
+    from repro.core.hardware import cpu_measured
+    from repro.core.perf_model import PerfModel
+
+    assert 1 in ks, "amortization is measured against K=1 (serial mixed_step)"
+    cfg = get_config(arch).reduced(layers=4, d_model=512, vocab=4096, d_ff=1536)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(seed))
+    eng = ServingEngine(model, params, num_pages=2048, page_size=16,
+                        decode_buckets=(batch,), backend=backend)
+    rng = np.random.RandomState(seed)
+    # the prefill prompt must outlast warmup + timing at every K so the
+    # chunk never completes inside a timed window (uniform per-round work)
+    p_len = (max(ks) + total_steps + 1) * sub_tokens
+    dec_prompts = [list(rng.randint(0, cfg.vocab_size, prompt_len))
+                   for _ in range(batch)]
+    pf_prompt = list(rng.randint(0, cfg.vocab_size, p_len))
+    tok_per_s: dict[int, float] = {}
+    syncs_per_dispatch: dict[int, float] = {}
+    streams: dict[int, list[list[int]]] = {}
+    for K in ks:
+        # fresh residents per K, same prompts, so every variant runs the
+        # identical workload from the same state
+        for rid in list(eng.requests):
+            eng.cache.free(rid)
+        eng.requests.clear()
+        eng.token_buf.clear()
+        eng.chunk_state.clear()
+        rids = []
+        for prompt in dec_prompts:
+            r = Request(Kind.OFFLINE, 0.0, prompt_len, 10 ** 6)
+            eng.add_request(r, prompt)
+            eng.prefill(r.rid)
+            rids.append(r.rid)
+        pf = Request(Kind.OFFLINE, 0.0, p_len, 10 ** 6)
+        eng.add_request(pf, pf_prompt)
+        # pre-claim pages to the end of the run so the padded table shapes
+        # (and thus the jit cache entry) stay fixed across timed rounds
+        eng.cache.ensure(pf.rid, p_len)
+        for rid in rids:
+            eng.cache.ensure(rid, prompt_len + max(ks) + total_steps + 1)
+        # warm/compile, advancing every variant by the same max(ks)
+        # iterations so the timed windows cover identical context ranges
+        n = 0
+        while n < max(ks):
+            if K == 1:
+                eng.mixed_step(rids, pf.rid, sub_tokens)
+                n += 1
+            else:
+                eng.mixed_horizon(rids, pf.rid, sub_tokens * K, K)
+                n += K
+        n, dispatches = 0, 0
+        syncs0 = eng.stats.host_syncs
+        t0 = time.perf_counter()
+        while n < total_steps:
+            if K == 1:
+                eng.mixed_step(rids, pf.rid, sub_tokens)
+                n += 1
+            else:
+                eng.mixed_horizon(rids, pf.rid, sub_tokens * K, K)
+                n += K
+            dispatches += 1
+        dt = time.perf_counter() - t0
+        # one device->host sync per dispatch, K iterations amortized onto it
+        syncs_per_dispatch[K] = (eng.stats.host_syncs - syncs0) / dispatches
+        assert syncs_per_dispatch[K] == 1.0, syncs_per_dispatch[K]
+        assert eng.prefill_progress(pf.rid) < p_len, "chunk finished mid-run"
+        tok_per_s[K] = (batch + sub_tokens) * n / dt
+        streams[K] = [eng.token_buf[r][:] for r in rids]
+    for K in ks:
+        assert streams[K] == streams[ks[0]], \
+            f"greedy parity broken: K={K} diverges from K={ks[0]}"
+    lo, hi = min(ks), max(ks)
+    t_lo = (batch + sub_tokens) / tok_per_s[lo]
+    t_hi = (batch + sub_tokens) / tok_per_s[hi]
+    implied_ov = max((t_lo - t_hi) / (1.0 / lo - 1.0 / hi), 0.0)
+    work = max(t_lo - implied_ov / lo, 1e-9)
+    pm = PerfModel(cfg, cpu_measured())
+    mid = prompt_len + max(ks) + total_steps // 2
+    suggested = pm.suggest_mixed_horizon(
+        sub_tokens * hi, (max(ks) + total_steps // 2 + 1) * sub_tokens,
+        [mid] * batch, dispatch_overhead=implied_ov, max_horizon=max(ks))
+    mh = donation_report(
+        lower_mixed_horizon_step(
+            eng, bucket=batch,
+            pages=eng.pad_pages(eng.cache.pages_for(
+                prompt_len + max(ks) + total_steps + 1)),
+            chunk_bucket=eng.pad_chunk(sub_tokens),
+            chunk_pages=eng.pad_pages(eng.cache.pages_for(p_len)), steps=4),
+        eng.cache.k_pool.shape)
+    out = {
+        "backend": eng.backend,
+        "batch": batch,
+        "sub_chunk_tokens": sub_tokens,
+        "tokens_per_s_by_k": {str(k): tok_per_s[k] for k in ks},
+        "implied_dispatch_overhead_ms": implied_ov * 1e3,
+        "dispatch_overhead_fraction": implied_ov / (implied_ov + work),
+        "syncs_per_dispatch": syncs_per_dispatch[max(ks)],
+        "suggested_k": suggested,
+        "fused_speedup": tok_per_s[hi] / tok_per_s[1],
+        "parity_ks_checked": list(ks),
+        "mixed_horizon_donated_args": mh["donated_args"],
+        "mixed_horizon_full_pool_copies": mh["full_pool_copies"],
+    }
+    if verbose:
+        by_k = " ".join(f"K={k}:{v:.1f}" for k, v in tok_per_s.items())
+        print(f"  mixed horizon ({eng.backend}, B={batch}+chunk"
+              f"{sub_tokens}/iter): {by_k} tok/s; fused K={hi} speedup "
+              f"{out['fused_speedup']:.2f}x vs serial mixed_step; dispatch "
+              f"overhead {out['implied_dispatch_overhead_ms']:.1f} ms "
+              f"({out['dispatch_overhead_fraction']:.0%} of a serial step); "
+              f"suggested K={suggested}; 1 sync/dispatch; donation "
+              f"{mh['donated_args']} aliased / {mh['full_pool_copies']} copies")
     return out

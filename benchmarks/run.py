@@ -4,8 +4,12 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention.
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME] [--gate]
 
 Exit code: non-zero if any bench errored (rows print ``ERROR ...``) or, with
-``--gate``, if ``bench_engine_throughput`` falls below the regression floor
-derived from the recorded ``BENCH_engine.json`` trajectory.
+``--gate``, if any regression gate trips. Gated rows report failures
+uniformly via ``_gate_check``: the row prints
+``ERROR gate failed [<gate>=<measured> (want <op> <threshold>); ...]:`` so a
+red CI line names exactly which bound tripped and by how much. Speedup
+floors (engine throughput, decode horizon, fused mixed horizon) derive from
+the recorded ``BENCH_engine.json`` trajectory.
 """
 from __future__ import annotations
 
@@ -21,6 +25,22 @@ def _row(name, us, derived):
     if str(derived).startswith("ERROR"):
         _ERRORS.append(name)
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+_GATE_OPS = {">=": lambda m, t: m >= t, "<=": lambda m, t: m <= t,
+             "==": lambda m, t: m == t}
+
+
+def _gate_check(gates) -> str:
+    """Uniform gate reporting: ``gates`` is a list of
+    ``(gate_name, measured, op, threshold)``. Returns an ``ERROR``-prefixed
+    row prefix naming EVERY failed gate with its threshold and measured
+    value (so a red CI row says exactly which bound tripped and by how
+    much), or '' when all gates hold. ``None`` measurements fail closed."""
+    fails = [f"{name}={'none' if m is None else f'{m:g}'} (want {op} {t:g})"
+             for name, m, op, t in gates
+             if m is None or not _GATE_OPS[op](m, t)]
+    return f"ERROR gate failed [{'; '.join(fails)}]: " if fails else ""
 
 
 def engine_throughput_floor(fraction: float = 0.25) -> float:
@@ -43,6 +63,20 @@ def horizon_speedup_floor(fraction: float = 0.25) -> float:
     recorded = next(r["decode_horizon"]["k16_speedup"]
                     for r in reversed(rec["trajectory"])
                     if "decode_horizon" in r)
+    return 1.0 + fraction * (recorded - 1.0)
+
+
+def mixed_horizon_speedup_floor(fraction: float = 0.25) -> float:
+    """Fused mixed-horizon regression floor: the K=16 fused dispatch must
+    keep at least ``fraction`` of the recorded fused-vs-serial speedup
+    margin over ``mixed_step`` (same noise tolerance as the decode-horizon
+    floor; losing the fusion entirely — speedup -> 1.0x — fails)."""
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
+    with open(path) as f:
+        rec = json.load(f)
+    recorded = next(r["mixed_horizon"]["fused_speedup"]
+                    for r in reversed(rec["trajectory"])
+                    if "mixed_horizon" in r)
     return 1.0 + fraction * (recorded - 1.0)
 
 
@@ -93,19 +127,20 @@ def bench_engine_throughput(quick=False, gate=False):
                                                     run_fused_vs_serial)
     t0 = time.perf_counter()
     r = run_engine_throughput(n_requests=8 if quick else 24, verbose=not quick)
-    floor = engine_throughput_floor() if gate else 0.0
-    gated = gate and r["cpu_tokens_per_s"] < floor
+    err = _gate_check([("cpu_tokens_per_s", r["cpu_tokens_per_s"], ">=",
+                        engine_throughput_floor())]) if gate else ""
     _row("table6_engine_throughput", (time.perf_counter() - t0) * 1e6,
-         (f"ERROR below regression floor {floor:.0f}tok/s: " if gated else "")
-         + f"cpu={r['cpu_tokens_per_s']:.0f}tok/s "
+         err + f"cpu={r['cpu_tokens_per_s']:.0f}tok/s "
          f"v5e_projected={r['v5e_projected_decode_tokens_per_s']:.0f}tok/s")
     t0 = time.perf_counter()
     m = run_fused_vs_serial(trials=4 if quick else 8, verbose=not quick)
-    bad = (m["fused_speedup"] < 1.0 or m["mixed_donated_args"] < 2
-           or m["mixed_full_pool_copies"] > 0)
+    err = _gate_check([
+        ("fused_speedup", m["fused_speedup"], ">=", 1.0),
+        ("donated_args", m["mixed_donated_args"], ">=", 2),
+        ("full_pool_copies", m["mixed_full_pool_copies"], "<=", 0),
+    ]) if gate else ""
     _row("table6_mixed_step", (time.perf_counter() - t0) * 1e6,
-         ("ERROR fused path regressed: " if gate and bad else "")
-         + f"fused={m['fused_tokens_per_s']:.0f} "
+         err + f"fused={m['fused_tokens_per_s']:.0f} "
          f"serial={m['serial_tokens_per_s']:.0f}tok/s "
          f"speedup={m['fused_speedup']:.2f}x "
          f"donated={m['mixed_donated_args']} "
@@ -116,12 +151,18 @@ def bench_decode_hotpath(quick=False, gate=False):
     """Zero-copy decode hot path: steps/s, host overhead, donation proof,
     multi-step decode-horizon amortization (gated on the recorded K=16
     speedup and on the horizon scan's pool donation)."""
-    from benchmarks.bench_decode_hotpath import (run_decode_hotpath,
-                                                 run_horizon_amortization)
+    from benchmarks.bench_decode_hotpath import (
+        run_decode_hotpath, run_horizon_amortization,
+        run_mixed_horizon_amortization)
     t0 = time.perf_counter()
     r = run_decode_hotpath(steps=10 if quick else 30, verbose=not quick)
+    err = _gate_check([
+        ("decode_donated_args", r["decode_donated_args"], ">=", 2),
+        ("decode_full_pool_copies", r["decode_full_pool_copies"], "<=", 0),
+        ("prefill_full_pool_copies", r["prefill_full_pool_copies"], "<=", 0),
+    ]) if gate else ""
     _row("decode_hotpath", (time.perf_counter() - t0) * 1e6,
-         f"steps_per_s={r['steps_per_s']:.1f} "
+         err + f"steps_per_s={r['steps_per_s']:.1f} "
          f"host_overhead_ms={r['host_overhead_ms_per_step']:.2f} "
          f"({r['host_overhead_fraction']:.0%}) "
          f"donated={r['decode_donated_args']} "
@@ -130,25 +171,41 @@ def bench_decode_hotpath(quick=False, gate=False):
     t0 = time.perf_counter()
     h = run_horizon_amortization(total_steps=32 if quick else 64,
                                  verbose=not quick)
-    floor = horizon_speedup_floor() if gate else 0.0
-    err = ""
-    if gate:
-        if h["k16_speedup"] < floor:
-            err = f"ERROR horizon speedup below floor {floor:.2f}x: "
-        elif (h["horizon_donated_args"] < 2
-              or h["horizon_full_pool_copies"] > 0):
-            err = "ERROR horizon scan lost pool donation: "
+    err = _gate_check([
+        ("horizon_k16_speedup", h["k16_speedup"], ">=",
+         horizon_speedup_floor()),
+        ("donated_args", h["horizon_donated_args"], ">=", 2),
+        ("full_pool_copies", h["horizon_full_pool_copies"], "<=", 0),
+    ]) if gate else ""
     ks = " ".join(f"k{k}={v:.0f}" for k, v in h["tokens_per_s_by_k"].items())
     _row("decode_horizon", (time.perf_counter() - t0) * 1e6,
          err + f"{ks} tok/s suggested_k={h['suggested_k']} "
          f"k16_speedup={h['k16_speedup']:.2f}x "
          f"donated={h['horizon_donated_args']} "
          f"pool_copies={h['horizon_full_pool_copies']}")
+    t0 = time.perf_counter()
+    mh = run_mixed_horizon_amortization(total_steps=32 if quick else 64,
+                                        verbose=not quick)
+    err = _gate_check([
+        ("mixed_horizon_fused_speedup", mh["fused_speedup"], ">=",
+         mixed_horizon_speedup_floor()),
+        ("donated_args", mh["mixed_horizon_donated_args"], ">=", 2),
+        ("full_pool_copies", mh["mixed_horizon_full_pool_copies"], "<=", 0),
+        ("syncs_per_dispatch", mh["syncs_per_dispatch"], "==", 1),
+    ]) if gate else ""
+    ks = " ".join(f"k{k}={v:.0f}" for k, v in mh["tokens_per_s_by_k"].items())
+    _row("mixed_horizon", (time.perf_counter() - t0) * 1e6,
+         err + f"{ks} tok/s fused_speedup={mh['fused_speedup']:.2f}x "
+         f"suggested_k={mh['suggested_k']} "
+         f"syncs_per_dispatch={mh['syncs_per_dispatch']:.0f} "
+         f"donated={mh['mixed_horizon_donated_args']} "
+         f"pool_copies={mh['mixed_horizon_full_pool_copies']}")
 
 
 def bench_colocation(quick=False, gate=False):
     from benchmarks.bench_colocation import (run_chaos_replay,
                                              run_colocation,
+                                             run_datacenter_replay,
                                              run_prefix_reuse,
                                              run_runtime_policy_comparison,
                                              summarize)
@@ -172,11 +229,12 @@ def bench_colocation(quick=False, gate=False):
     t0 = time.perf_counter()
     ch = run_chaos_replay(quick=quick, verbose=not quick)
     crun = ch["runs"]["chaos"]
-    bad = gate and (crun["online_slo_attainment"] < 1.0
-                    or crun["engine_crashes"] != 1)
+    err = _gate_check([
+        ("online_slo_attainment", crun["online_slo_attainment"], ">=", 1.0),
+        ("engine_crashes", crun["engine_crashes"], "==", 1),
+    ]) if gate else ""
     _row("fig6_chaos_replay", (time.perf_counter() - t0) * 1e6,
-         ("ERROR online SLO lost under relaxed-engine crash: " if bad else "")
-         + f"attain={crun['online_slo_attainment']:.2f} "
+         err + f"attain={crun['online_slo_attainment']:.2f} "
          f"crashes={crun['engine_crashes']} "
          f"recoveries={crun['recoveries']} "
          f"offline_tput_loss={ch['offline_tput_loss']:.2f} "
@@ -186,14 +244,41 @@ def bench_colocation(quick=False, gate=False):
     # >= 5x) with bit-exact greedy token parity (asserted inside)
     t0 = time.perf_counter()
     pr = run_prefix_reuse(quick=quick, verbose=not quick)
-    bad = gate and (not pr["token_parity"]
-                    or pr["effective_prefill_speedup"] < 3.0)
+    err = _gate_check([
+        ("effective_prefill_speedup", pr["effective_prefill_speedup"],
+         ">=", 3.0),
+        ("token_parity", int(pr["token_parity"]), "==", 1),
+    ]) if gate else ""
     _row("prefix_reuse", (time.perf_counter() - t0) * 1e6,
-         ("ERROR prefix-cache speedup below 3x floor: " if bad else "")
-         + f"eff_prefill_speedup={pr['effective_prefill_speedup']:.2f}x "
+         err + f"eff_prefill_speedup={pr['effective_prefill_speedup']:.2f}x "
          f"hit_rate={pr['hit_rate']:.2f} "
          f"cached_frac={pr['cached_token_fraction']:.2f} "
          f"token_parity={pr['token_parity']}")
+    # datacenter-overhead replay: replay_hw('v5e') charges real v5e
+    # dispatch overheads, where horizon fusion pays — full ooco must keep
+    # >= online_priority offline throughput at 100% online SLO attainment
+    # while actually firing fused mixed-horizon rounds
+    t0 = time.perf_counter()
+    dc = run_datacenter_replay(quick=quick, verbose=not quick)
+    err = _gate_check([
+        ("ooco_online_slo_attainment",
+         dc["policies"]["ooco"]["online_slo_attainment"], ">=", 1.0),
+        ("ooco_vs_online_priority_offline_tput",
+         dc["ooco_vs_online_priority_offline_tput"], ">=", 1.0),
+        ("mixed_horizon_rounds", dc["mixed_horizon_rounds"], ">=", 1),
+    ]) if gate else ""
+    _row("datacenter_replay", (time.perf_counter() - t0) * 1e6,
+         err + f"hw={dc['hw']} attain(op/ooco_h1/ooco)="
+         f"{dc['policies']['online_priority']['online_slo_attainment']:.2f}/"
+         f"{dc['policies']['ooco_h1']['online_slo_attainment']:.2f}/"
+         f"{dc['policies']['ooco']['online_slo_attainment']:.2f} "
+         f"offline_tok/s="
+         f"{dc['policies']['online_priority']['offline_tokens_per_s']:.0f}/"
+         f"{dc['policies']['ooco_h1']['offline_tokens_per_s']:.0f}/"
+         f"{dc['policies']['ooco']['offline_tokens_per_s']:.0f} "
+         f"ooco_vs_op={dc['ooco_vs_online_priority_offline_tput']}x "
+         f"vs_h1={dc['ooco_vs_horizon1_offline_tput']}x "
+         f"mixed_horizon_rounds={dc['mixed_horizon_rounds']}")
     t0 = time.perf_counter()
     datasets = ("ooc",) if quick else ("ooc", "azure_conv", "azure_code")
     results = run_colocation(duration=120 if quick else 180,
@@ -222,13 +307,13 @@ def bench_gateway(quick=False, gate=False):
     res = run_gateway_load(quick=quick, verbose=not quick)
     us = (time.perf_counter() - t0) * 1e6 / max(len(res), 1)
     for name, r in res.items():
-        bad = gate and (r["leaked_pages"] > 0
-                        or (r["ttft_p99"] or 0) > SLO_TTFT
-                        or (r["tpot_p99"] or 0) > SLO_TPOT)
+        err = _gate_check([
+            ("leaked_pages", r["leaked_pages"], "<=", 0),
+            ("ttft_p99", r["ttft_p99"] or 0, "<=", SLO_TTFT),
+            ("tpot_p99", r["tpot_p99"] or 0, "<=", SLO_TPOT),
+        ]) if gate else ""
         _row(f"gateway_{name}", us,
-             (f"ERROR leak/p99 gate (slo {SLO_TTFT}/{SLO_TPOT}s): "
-              if bad else "")
-             + f"streams={r['n_streams']} fin={r['finished']} "
+             err + f"streams={r['n_streams']} fin={r['finished']} "
              f"cancel={r['cancelled']} deadline={r['deadline']} "
              f"rej={r['rejected']} ttft_p99={r['ttft_p99']:.2f}s "
              f"tpot_p99={r['tpot_p99']:.3f}s leaked={r['leaked_pages']} "
@@ -288,8 +373,11 @@ def main() -> int:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--gate", action="store_true",
-                    help="fail (exit 1) if engine throughput drops below "
-                         "the floor derived from BENCH_engine.json")
+                    help="fail (exit 1) if any regression gate trips "
+                         "(throughput / horizon / mixed-horizon floors from "
+                         "BENCH_engine.json, donation, SLO, leak, parity); "
+                         "each failing row names the gate, its threshold, "
+                         "and the measured value")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():

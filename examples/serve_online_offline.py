@@ -28,6 +28,9 @@ def main():
     ap.add_argument("--duration", type=float, default=30.0)
     ap.add_argument("--online-qps", type=float, default=0.4)
     ap.add_argument("--offline-qps", type=float, default=1.0)
+    ap.add_argument("--trace", default="ooc",
+                    choices=["ooc", "shared-prefix"])
+    ap.add_argument("--max-prompt", type=int, default=48)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -43,7 +46,7 @@ def main():
                           seed=args.seed)
     online, offline = build_traces(args, cfg)   # same synthesis as the CLI
     m = runtime.run(online, offline, duration=args.duration,
-                    max_prompt=48, max_output=24)
+                    max_prompt=args.max_prompt, max_output=24)
 
     print(f"finished: online={m['online_finished']}/{m['online_requests']} "
           f"offline={m['offline_finished']}/{m['offline_requests']} "
@@ -62,6 +65,13 @@ def main():
           f"migrations: {m['migrations']} (pulled: {m['pulls']}), "
           f"evictions: {m['evictions']}")
     print(f"rounds: {m['rounds']} (+{m['idle_rounds']} idle skipped)")
+    print(f"fused dispatches: decode horizons={m['horizon_rounds']} "
+          f"mixed horizons={m['mixed_horizon_rounds']} "
+          f"({m['horizon_steps']} horizon steps over "
+          f"{m['host_syncs']} host syncs)")
+    by_kind = ", ".join(f"{k}={v}" for k, v in
+                        sorted(m["dispatches_by_kind"].items()) if v)
+    print(f"dispatches by kind: {by_kind or 'none'}")
 
 
 if __name__ == "__main__":

@@ -459,6 +459,156 @@ class PerfModel:
                 k -= 1
         return k
 
+    def mixed_horizon_estimate(self, chunk_tokens: int, chunk_ctx: int,
+                               decode_ctx: Sequence[int] = (),
+                               steps: int = 1, *,
+                               cached_tokens: int = 0) -> StepEstimate:
+        """One **fused mixed-horizon dispatch**: ``steps`` decode iterations
+        for the batch over ``decode_ctx`` run in a single ``lax.scan``
+        while the prefill chunk of ``chunk_tokens`` lands as ``steps``
+        sub-chunk slices (``scheduling.split_chunk``), the final slice
+        ending at ``chunk_ctx``. One static dispatch overhead per horizon.
+
+        Chunk work is summed per sub-chunk (K slices stream the weights K
+        times — the real cost of splitting, so the estimate is honest about
+        when fusing does NOT pay); decode attention is evaluated at the
+        midpoint context ``c + (K-1)/2`` exactly like
+        ``horizon_estimate``."""
+        chunk_tokens = int(chunk_tokens)
+        steps = max(int(steps), 1)
+        if chunk_tokens <= 0:
+            return self.horizon_estimate(decode_ctx, steps)
+        if steps == 1:
+            return self.mixed_estimate(chunk_tokens, chunk_ctx, decode_ctx,
+                                       cached_tokens=cached_tokens)
+        steps = min(steps, chunk_tokens)
+        cached_tokens = max(0, min(int(cached_tokens),
+                                   int(chunk_ctx) - chunk_tokens))
+        ctx = np.asarray(list(decode_ctx), np.float64)
+        hw = self.hw
+        overhead = max(hw.O_p, hw.O_d if ctx.size else 0.0)
+        lat, fl, by, comp, mem, comm, kvb = (overhead, 0.0, 0.0, 0.0, 0.0,
+                                             0.0, 0.0)
+        # chunk side: sum the per-sub-chunk estimates (same int arithmetic
+        # as mixed_estimate applied slice by slice)
+        done = int(chunk_ctx) - chunk_tokens
+        base, rem = divmod(chunk_tokens, steps)
+        pos = done
+        for i in range(steps):
+            s = base + 1 if i < rem else base
+            skv = max(pos + s - s // 2, 1)
+            ops = self._all_layers(s, [s], [skv], decode=False)
+            p = self._sum(ops, 0.0, kv_bytes=0.0)
+            lat += p.latency
+            fl += p.flops
+            by += p.bytes
+            comp += p.compute_time
+            mem += p.memory_time
+            comm += p.comm_time
+            pos += s
+        if cached_tokens:
+            p = self._sum([self._page_table_op(cached_tokens)], 0.0,
+                          kv_bytes=0.0)
+            lat += p.latency
+            fl += p.flops
+            by += p.bytes
+            comp += p.compute_time
+            mem += p.memory_time
+        kvb += self.kv_bytes([max(int(chunk_ctx) - cached_tokens, 1)])
+        if ctx.size:
+            gf, gb, gl, gc, gm = self._decode_batch_terms(float(len(ctx)))
+            mid = ctx + (steps - 1) / 2.0
+            af, ab, ac, am = self._decode_attn_fb(mid)
+            al = self.decode_attn_time(mid).sum()
+            lat += float(steps * (gl + al))
+            fl += float(steps * (gf + af))
+            by += float(steps * (gb + ab))
+            comp += float(steps * (gc + ac))
+            mem += float(steps * (gm + am))
+            kvb += self.kv_bytes(ctx + steps - 1)
+        work = lat - overhead
+        if work <= 0 or overhead > work:
+            bn = "overhead"
+        elif comp > 1.3 * mem:
+            bn = "compute"
+        elif mem > 1.3 * comp:
+            bn = "memory"
+        else:
+            bn = "balanced"
+        return StepEstimate(latency=lat, flops=fl, bytes=by, compute_time=comp,
+                            memory_time=mem, comm_time=comm, overhead=overhead,
+                            kv_bytes=kvb, bottleneck=bn)
+
+    def suggest_mixed_horizon(self, chunk_tokens: int, chunk_ctx: int,
+                              decode_ctx: Sequence[int] = (), *,
+                              slo: float | None = None,
+                              preempt_latency: float | None = None,
+                              queued_online: bool = False,
+                              dispatch_overhead: float | None = None,
+                              overhead_frac: float = 0.02,
+                              max_horizon: int = 16) -> int:
+        """Horizon K for a fused mixed round (chunk + decode in one scan).
+
+        Amortization targets the DECODE side (the chunk's weight streaming
+        is paid per sub-chunk either way, so splitting a chunk with no
+        decode batch riding is strictly worse — returns 1). Fusing is NOT
+        free for the chunk: every scan iteration re-streams the weights,
+        so a K-horizon pays K weight streams to land the SAME chunk one
+        round used to land in one stream — K only wins when the amortized
+        dispatch overhead plus the extra decode tokens beat that cost. K
+        is therefore chosen to maximize the round's MODELED token
+        throughput, ``(chunk + K * batch) / latency(K)``, over candidate
+        horizons up to the decode-amortization bound (overhead-dominated
+        hardware pushes K up; streaming-dominated hardware keeps K at 1).
+        The §3.4.1 bound applies to the whole dispatch: a horizon is one
+        uninterruptible unit, so chunk-boundary preemption becomes
+        horizon-boundary preemption and the horizon's end-to-end latency
+        must fit under ``min(slo, preempt_latency)``. With online arrivals
+        already queued (``queued_online``) the remaining preemption budget
+        is half — K shrinks rather than pinning to 1, because the chunk
+        still has to land either way."""
+        chunk_tokens = int(chunk_tokens)
+        ctx = list(decode_ctx)
+        if chunk_tokens <= 0:
+            return self.suggest_decode_horizon(
+                ctx, slo=slo, preempt_latency=preempt_latency,
+                dispatch_overhead=dispatch_overhead,
+                overhead_frac=overhead_frac, max_horizon=max_horizon)
+        if not ctx:
+            return 1
+        arr = np.asarray(ctx, np.float64)
+        ov = float(self.hw.O_d if dispatch_overhead is None
+                   else max(dispatch_overhead, self.hw.O_d))
+        w = max(self._fast_decode(arr).latency - self.hw.O_d, 1e-12)
+        k = int(np.ceil(ov * (1.0 - overhead_frac) / (overhead_frac * w)))
+        k = min(max(k, 1), max(int(max_horizon), 1), chunk_tokens)
+        if k > 1:
+            # modeled-throughput argmax over candidate horizons (powers of
+            # two up to the amortization bound): tokens landed per modeled
+            # second, counting the chunk once and one decode token per
+            # resident per iteration
+            cands = sorted({1, k} | {c for c in (2, 4, 8, 16, 32)
+                                     if c < k})
+            extra = ov - max(self.hw.O_p, self.hw.O_d)
+
+            def tput(c):
+                est = self.mixed_horizon_estimate(
+                    chunk_tokens, chunk_ctx, ctx, c)
+                return (chunk_tokens + c * len(ctx)) / (
+                    est.latency + max(extra, 0.0))
+            k = max(cands, key=tput)
+        bound = min((b for b in (slo, preempt_latency) if b is not None),
+                    default=None)
+        if bound is not None:
+            if queued_online:
+                bound = bound / 2.0
+            model_ov = max(self.hw.O_p, self.hw.O_d)
+            while k > 1 and (self.mixed_horizon_estimate(
+                    chunk_tokens, chunk_ctx, ctx, k).latency
+                    - model_ov + max(ov, model_ov)) > bound:
+                k -= 1
+        return k
+
     def decode_estimate(self, context_lens: Sequence[int],
                         detail: bool = False) -> StepEstimate:
         """One decode step for a batch whose requests have the given context

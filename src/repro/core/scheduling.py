@@ -92,10 +92,12 @@ def mix_decoding_selection(
 @dataclass
 class MixedPlan:
     """One engine round under the token-budget scheduler: the decode batch
-    plus (optionally) a prefill chunk fused into the same dispatch, OR a
-    multi-step decode horizon (``horizon`` fused decode iterations — only
-    ever > 1 on chunkless rounds; a fused mixed step is single-step by
-    construction)."""
+    plus (optionally) a prefill chunk fused into the same dispatch, and/or
+    a multi-step horizon. ``horizon > 1`` with ``prefill`` set means a
+    fused *mixed-horizon* round: one dispatch runs ``horizon`` decode
+    iterations while landing the chunk as ``horizon`` sub-chunk slices
+    (``split_chunk``), so the round's token budget covers
+    ``decode x horizon + chunk_tokens`` total tokens."""
     decode: list[Request]
     prefill: Request | None = None
     chunk_tokens: int = 0      # prompt tokens of `prefill` to run this round
@@ -104,6 +106,16 @@ class MixedPlan:
     @property
     def total_tokens(self) -> int:
         return len(self.decode) * self.horizon + self.chunk_tokens
+
+
+def split_chunk(chunk_tokens: int, steps: int) -> list[int]:
+    """Split a prefill chunk into per-iteration sub-chunk sizes for a
+    mixed-horizon dispatch: ``steps`` slices, each >= 1 token, differing by
+    at most one token, summing exactly to ``chunk_tokens``. The larger
+    slices come first so the final slice is never the odd one out."""
+    steps = max(min(int(steps), int(chunk_tokens)), 1)
+    base, rem = divmod(int(chunk_tokens), steps)
+    return [base + 1 if i < rem else base for i in range(steps)]
 
 
 def token_budget_schedule(
@@ -138,10 +150,14 @@ def token_budget_schedule(
     ``budget_tokens`` overrides the roofline suggestion (``--chunk-tokens
     N``); ``decode_override`` lets a caller keep its own decode-batch
     policy (the runtime's baselines) while the budget sizes the chunk.
-    ``horizon`` is the caller's multi-step decode-horizon allowance: it is
-    recorded in the plan only when NO chunk rides the round (a fused mixed
-    step advances one decode token per resident by construction), so the
-    token budget of a chunkless round is decode-batch x horizon."""
+    ``horizon`` is the caller's multi-step decode-horizon allowance. On a
+    chunkless round the plan carries it directly (token budget =
+    decode-batch x horizon). When a chunk rides a latency-relaxed round
+    the plan now keeps ``horizon > 1`` too — the round becomes one fused
+    mixed-horizon dispatch whose budget is split into ``horizon``
+    sub-chunks — clamped to ``chunk // bucket`` so every non-final
+    sub-chunk is at least one bucket (~one page) of prefill. Strict
+    rounds keep single-step fused semantics (``horizon == 1``)."""
     if decode_override is not None:
         decode = list(decode_override)
     elif slo is not None:
@@ -190,7 +206,17 @@ def token_budget_schedule(
         chunk = best
     if chunk <= 0:
         return MixedPlan(decode, horizon=max(int(horizon), 1))
-    return MixedPlan(decode, prefill, int(chunk))
+    horizon = max(int(horizon), 1)
+    if slo is not None:
+        # latency-strict chunked round: one uninterruptible dispatch per
+        # horizon would stretch the preemption boundary past the SLO math
+        # above, which sized the chunk for a single fused step
+        horizon = 1
+    elif horizon > 1:
+        # every non-final sub-chunk must carry at least one bucket (~one
+        # page) of prefill, or splitting only multiplies scatter overhead
+        horizon = max(1, min(horizon, int(chunk) // max(int(bucket), 1)))
+    return MixedPlan(decode, prefill, int(chunk), horizon)
 
 
 def decode_horizon_steps(

@@ -60,6 +60,14 @@ The per-iteration hot path is allocation- and sync-free:
   mid-horizon, and early-exit masking for rows that hit ``max_new_tokens``.
   One (K, B) token block crosses the device boundary per horizon instead of
   one (B,) sync per token; ``PerfModel.suggest_decode_horizon`` picks K.
+* **Fused mixed horizons**: ``mixed_horizon(rids, prid, chunk_tokens, K)``
+  runs K fused mixed iterations in one scan — each iteration lands a
+  ``chunk_tokens / K`` sub-chunk slice of the pending prefill while
+  decoding the residents, sharing ``_mixed_core`` with ``mixed_step`` so
+  the per-step math is bit-identical. Pages for the whole chunk AND K
+  decode tokens per resident are claimed before the dispatch;
+  ``PerfModel.suggest_mixed_horizon`` picks K under the §3.4.1
+  horizon-boundary preemption bound.
 
 ``benchmarks/bench_decode_hotpath.py`` measures steps/s and host overhead
 per step and verifies pool donation from the lowered HLO;
@@ -69,7 +77,7 @@ from __future__ import annotations
 
 import functools
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable
 
 import jax
@@ -78,6 +86,7 @@ import numpy as np
 
 from repro.core.perf_model import PerfModel
 from repro.core.request import Phase, Request
+from repro.core.scheduling import split_chunk
 from repro.engine.kv_cache import PagedKVCache, transfer_checksum, verify_transfer
 
 
@@ -206,6 +215,12 @@ class EngineStats:
     prefix_hits: int = 0      # prompts that claimed >= 1 cached prefix page
     cached_tokens: int = 0    # prompt tokens served from the prefix cache
     shared_pages: int = 0     # pages claimed via refcount bumps, cumulative
+    # dispatch counts per kind — makes amortization observable directly
+    # (e.g. mixed_horizon dispatches each cover K steps + K sub-chunks),
+    # not just via the host_syncs aggregate
+    dispatches_by_kind: dict = field(default_factory=lambda: {
+        "prefill": 0, "decode": 0, "mixed": 0, "horizon": 0,
+        "mixed_horizon": 0})
 
 
 class ServingEngine:
@@ -255,6 +270,7 @@ class ServingEngine:
             self._decode_fns = src._decode_fns
             self._mixed_fns = src._mixed_fns
             self._horizon_fns = src._horizon_fns
+            self._mixed_horizon_fns = src._mixed_horizon_fns
             self._layer_params_cached = src._layer_params_cached
         else:
             self._layer_fn = self._build_layer_fn()
@@ -264,6 +280,7 @@ class ServingEngine:
             self._decode_fns: dict[tuple[int, int], Callable] = {}
             self._mixed_fns: dict[tuple, Callable] = {}
             self._horizon_fns: dict[tuple, Callable] = {}
+            self._mixed_horizon_fns: dict[tuple, Callable] = {}
             # per-layer params sliced once (not jax.tree.map per layer per prefill)
             self._layer_params_cached = [
                 jax.tree.map(lambda a, i=i: a[i], params["layers"])
@@ -438,6 +455,7 @@ class ServingEngine:
         req.phase = Phase.DECODING
         self.stats.prefill_tokens += S
         self.stats.host_syncs += 1
+        self.stats.dispatches_by_kind["prefill"] += 1
         self.stats.prefill_seconds += time.perf_counter() - t0
         return "done"
 
@@ -701,6 +719,7 @@ class ServingEngine:
             key, sample_step, jnp.asarray(temps), jnp.asarray(topks))
         nxt = np.asarray(nxt_dev)   # (bucket,) ids — the only device->host sync
         self.stats.host_syncs += 1
+        self.stats.dispatches_by_kind["decode"] += 1
         return self._decode_finish(rids, nxt, time.perf_counter() - t0)
 
     # ------------------------------------------------------------------
@@ -791,27 +810,24 @@ class ServingEngine:
         self.stats.decode_steps += steps
         self.stats.horizon_steps += steps
         self.stats.host_syncs += 1
+        self.stats.dispatches_by_kind["horizon"] += 1
         self.stats.decode_seconds += dt
         return out
 
     # ------------------------------------------------------------------
     # fused mixed prefill/decode step (chunked prefill)
     # ------------------------------------------------------------------
-    def _mixed_fn(self, dec_bucket: int, dec_pages: int, chunk_bucket: int,
-                  chunk_pages: int, sampled: bool = False):
-        """Jitted fused step: one dispatch advances a token-budgeted prefill
-        chunk AND decodes the resident batch, both writing the same donated
-        KV pools. ``dec_bucket == 0`` specializes to a chunk-only step.
-
-        The chunk is a length-bucketed query block at positions
-        ``[start, start + c_len)``; its K/V is scattered into the paged pool
-        first, then the chunk attends over the request's (gathered) pages —
-        i.e. over everything already landed plus itself — with causal
-        ``q_offset`` masking and a per-row ``kv_lens`` bound, so one trace
-        serves every (chunk length, context) in the bucket."""
-        fkey = (dec_bucket, dec_pages, chunk_bucket, chunk_pages, sampled)
-        if fkey in self._mixed_fns:
-            return self._mixed_fns[fkey]
+    def _mixed_core(self, dec_bucket: int, chunk_bucket: int,
+                    chunk_pages: int):
+        """One fused mixed iteration over the layer stack — the computation
+        SHARED by the single-step jitted mixed step and the K-step
+        mixed-horizon scan, so the two paths are token-identical by
+        construction (the same way ``_decode_core`` backs both
+        ``decode_step`` and ``decode_horizon``). Returns
+        ``core(params, d_tokens, d_positions, d_tables, d_lengths, d_page,
+        d_off, c_tokens, c_start, c_len, c_tables, k_pool, v_pool) ->
+        (logits, k_pool, v_pool)`` where ``logits`` stacks the decode rows
+        (dec_bucket, V) followed by the chunk's last-position row (1, V)."""
         cfg = self.cfg
         model = self.model
         page_size = self.cache.page_size
@@ -819,12 +835,9 @@ class ServingEngine:
         with_decode = dec_bucket > 0
         hd = cfg.head_dim_
 
-        @functools.partial(jax.jit, donate_argnums=(8, 9))
-        def step(params, d_tokens, d_positions, d_tables, d_lengths,
-                 c_tokens, c_meta, c_tables, k_pool, v_pool,
-                 key, sample_step, temps, top_ks):
-            # c_meta (2,) int32 = [start (tokens already landed), c_len]
-            c_start, c_len = c_meta[0], c_meta[1]
+        def core(params, d_tokens, d_positions, d_tables, d_lengths,
+                 d_page, d_off, c_tokens, c_start, c_len, c_tables,
+                 k_pool, v_pool):
             xc = model._embed(params, c_tokens[None])            # (1, C, d)
             c_pos = c_start + jnp.arange(chunk_bucket, dtype=jnp.int32)
             in_chunk = jnp.arange(chunk_bucket) < c_len
@@ -839,9 +852,6 @@ class ServingEngine:
             c_kv_len = (c_start + c_len)[None]                   # (1,)
             if with_decode:
                 xd = model._embed(params, d_tokens[:, None])
-                d_page = jnp.take_along_axis(
-                    d_tables, (d_positions // page_size)[:, None], axis=1)[:, 0]
-                d_off = d_positions % page_size
             else:
                 xd = jnp.zeros((), jnp.float32)  # carry placeholder
 
@@ -929,6 +939,44 @@ class ServingEngine:
                     [model._logits(params, xd[:, 0]), logits_c], axis=0)
             else:
                 logits = logits_c
+            return logits, k_pool, v_pool
+
+        return core
+
+    def _mixed_fn(self, dec_bucket: int, dec_pages: int, chunk_bucket: int,
+                  chunk_pages: int, sampled: bool = False):
+        """Jitted fused step: one dispatch advances a token-budgeted prefill
+        chunk AND decodes the resident batch, both writing the same donated
+        KV pools. ``dec_bucket == 0`` specializes to a chunk-only step.
+
+        The chunk is a length-bucketed query block at positions
+        ``[start, start + c_len)``; its K/V is scattered into the paged pool
+        first, then the chunk attends over the request's (gathered) pages —
+        i.e. over everything already landed plus itself — with causal
+        ``q_offset`` masking and a per-row ``kv_lens`` bound, so one trace
+        serves every (chunk length, context) in the bucket."""
+        fkey = (dec_bucket, dec_pages, chunk_bucket, chunk_pages, sampled)
+        if fkey in self._mixed_fns:
+            return self._mixed_fns[fkey]
+        core = self._mixed_core(dec_bucket, chunk_bucket, chunk_pages)
+        page_size = self.cache.page_size
+        with_decode = dec_bucket > 0
+
+        @functools.partial(jax.jit, donate_argnums=(8, 9))
+        def step(params, d_tokens, d_positions, d_tables, d_lengths,
+                 c_tokens, c_meta, c_tables, k_pool, v_pool,
+                 key, sample_step, temps, top_ks):
+            # c_meta (2,) int32 = [start (tokens already landed), c_len]
+            if with_decode:
+                d_page = jnp.take_along_axis(
+                    d_tables, (d_positions // page_size)[:, None], axis=1)[:, 0]
+                d_off = d_positions % page_size
+            else:
+                d_page = d_off = jnp.zeros(0, jnp.int32)
+            logits, k_pool, v_pool = core(
+                params, d_tokens, d_positions, d_tables, d_lengths,
+                d_page, d_off, c_tokens, c_meta[0], c_meta[1], c_tables,
+                k_pool, v_pool)
             if sampled:
                 nxt = sample_tokens(logits, jax.random.fold_in(key, sample_step),
                                     temps, top_ks)
@@ -938,6 +986,69 @@ class ServingEngine:
 
         self._mixed_fns[fkey] = step
         return step
+
+    def _mixed_horizon_fn(self, dec_bucket: int, dec_pages: int,
+                          chunk_bucket: int, chunk_pages: int, steps: int,
+                          sampled: bool = False):
+        """Jitted K-step fused mixed horizon: ``jax.lax.scan`` over
+        ``steps`` iterations of the SAME per-step core as ``_mixed_fn`` —
+        each iteration lands one sub-chunk slice of the pending prefill
+        chunk (``c_tokens``/``c_meta`` carry a per-iteration (steps, C)
+        token block and (steps, 2) [start, len] metadata as scan xs) while
+        running one decode iteration for the resident batch with the
+        sampled token fed back on-device. Decode rows whose
+        ``active_steps`` budget is exhausted (request hit
+        ``max_new_tokens`` mid-horizon, or bucket padding) are masked
+        exactly like ``_horizon_fn``: KV writes redirect to the reserved
+        trash page 0, positions freeze, carried tokens repeat. Both KV
+        pools ride the donated scan carry; the host sees only the stacked
+        (steps, dec_bucket + 1) token block — one sync per horizon."""
+        fkey = (dec_bucket, dec_pages, chunk_bucket, chunk_pages, steps,
+                sampled)
+        if fkey in self._mixed_horizon_fns:
+            return self._mixed_horizon_fns[fkey]
+        core = self._mixed_core(dec_bucket, chunk_bucket, chunk_pages)
+        page_size = self.cache.page_size
+        with_decode = dec_bucket > 0
+
+        @functools.partial(jax.jit, donate_argnums=(4, 5))
+        def horizon(params, d_tokens, d_positions, d_tables, k_pool, v_pool,
+                    active_steps, c_tokens, c_meta, c_tables, key,
+                    first_step, temps, top_ks):
+            def step_body(carry, inp):
+                d_toks, d_pos, kpool, vpool = carry
+                t, c_tok, c_m = inp
+                active = t < active_steps
+                d_lengths = d_pos + 1
+                if with_decode:
+                    d_page = jnp.take_along_axis(
+                        d_tables, (d_pos // page_size)[:, None], axis=1)[:, 0]
+                    d_page = jnp.where(active, d_page, 0)
+                    d_off = d_pos % page_size
+                else:
+                    d_page = d_off = jnp.zeros(0, jnp.int32)
+                logits, kpool, vpool = core(
+                    params, d_toks, d_pos, d_tables, d_lengths,
+                    d_page, d_off, c_tok, c_m[0], c_m[1], c_tables,
+                    kpool, vpool)
+                if sampled:
+                    nxt = sample_tokens(
+                        logits, jax.random.fold_in(key, first_step + t),
+                        temps, top_ks)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                if with_decode:
+                    d_toks = jnp.where(active, nxt[:dec_bucket], d_toks)
+                    d_pos = jnp.where(active, d_pos + 1, d_pos)
+                return (d_toks, d_pos, kpool, vpool), nxt
+
+            (d_tokens, d_positions, k_pool, v_pool), toks = jax.lax.scan(
+                step_body, (d_tokens, d_positions, k_pool, v_pool),
+                (jnp.arange(steps, dtype=jnp.int32), c_tokens, c_meta))
+            return toks, k_pool, v_pool
+
+        self._mixed_horizon_fns[fkey] = horizon
+        return horizon
 
     def mixed_step(self, decode_rids: list[int], prefill_rid: int | None = None,
                    chunk_tokens: int = 0) -> dict[int, int]:
@@ -1048,6 +1159,7 @@ class ServingEngine:
         state.done += c
         req.prefill_tokens_done = state.done
         self.stats.prefill_chunks += 1
+        self.stats.dispatches_by_kind["mixed" if rids else "prefill"] += 1
         if rids:
             self.stats.mixed_steps += 1
         else:
@@ -1061,6 +1173,185 @@ class ServingEngine:
                 # publish the full pages into the radix tree (refcount bump
                 # per adopted page) so later prompts can reuse them; the
                 # partial tail page stays private
+                self.cache.prefix.insert(
+                    state.tokens.tolist(), self.cache.tables[prid])
+            del self.chunk_state[prid]
+            if req.done:   # one-output request: finished at prefill
+                req.phase = Phase.FINISHED
+                self.cache.free(prid)
+                self.req_sampling.pop(prid, None)
+        return out
+
+    # ------------------------------------------------------------------
+    # fused mixed-horizon dispatch (chunk + K decode iterations, one sync)
+    # ------------------------------------------------------------------
+    def max_mixed_horizon_for(self, rids: list[int], prid: int,
+                              chunk_tokens: int, steps: int) -> int:
+        """Largest horizon <= ``steps`` whose combined page claim-ahead —
+        the FULL chunk for ``prid`` plus up to ``steps`` decode tokens per
+        resident — fits the free pool. The chunk's claim is set aside
+        first (it does not shrink with K: the whole chunk lands inside one
+        horizon either way), then K shrinks like ``max_horizon_for``
+        against the remainder, so neither side can starve the other into
+        ``OutOfPagesError`` mid-scan."""
+        req = self.requests[prid]
+        done = req.prefill_tokens_done
+        c = min(int(chunk_tokens), req.prompt_len - done)
+        chunk_need = max(0, self.cache.pages_for(done + max(c, 1))
+                         - len(self.cache.tables.get(prid, ())))
+        free = self.cache.available_pages - chunk_need
+
+        def need(k: int) -> int:
+            tot = 0
+            for r in rids:
+                rq = self.requests[r]
+                a = min(k, max(rq.remaining, 1))
+                tot += max(0, self.cache.pages_for(rq.context_len - 1 + a)
+                           - len(self.cache.tables.get(r, ())))
+            return tot
+
+        steps = min(int(steps), max(c, 1))
+        while steps > 1 and need(steps) > free:
+            steps -= 1
+        return max(steps, 1)
+
+    def mixed_horizon(self, decode_rids: list[int],
+                      prefill_rid: int | None = None, chunk_tokens: int = 0,
+                      steps: int = 1) -> dict[int, list[int]]:
+        """Run up to ``steps`` fused mixed iterations as ONE jitted
+        dispatch: per iteration a ``chunk_tokens / steps`` slice of
+        ``prefill_rid``'s pending chunk lands in the donated KV pools while
+        one decode iteration runs for ``decode_rids`` with on-device token
+        feedback — K steps, one host sync. Token-identical to ``steps``
+        serial ``mixed_step`` calls (greedy and seeded sampling for a
+        fixed batch; rows hitting ``max_new_tokens`` mid-horizon stop
+        emitting via masking). Falls back to ``decode_horizon`` when no
+        chunk rides and to ``mixed_step`` when ``steps <= 1``. Decode rids
+        beyond the biggest bucket run as plain decode horizons alongside.
+        Returns rid -> list of new tokens for the decode rids; chunk
+        progress is visible via ``prefill_progress`` and the phase flip to
+        DECODING once the prompt completes."""
+        self._check_alive()
+        if prefill_rid is None or chunk_tokens <= 0:
+            return self.decode_horizon(decode_rids, steps)
+        steps = int(steps)
+        if steps <= 1:
+            return {r: [t] for r, t in self.mixed_step(
+                decode_rids, prefill_rid, chunk_tokens).items()}
+        max_bucket = self.decode_buckets[-1]
+        out = self._mixed_horizon_dispatch(
+            decode_rids[:max_bucket], prefill_rid, chunk_tokens, steps)
+        rest = decode_rids[max_bucket:]
+        if rest:
+            out.update(self.decode_horizon(rest, steps))
+        return out
+
+    def _mixed_horizon_dispatch(self, rids: list[int], prid: int,
+                                chunk_tokens: int,
+                                steps: int) -> dict[int, list[int]]:
+        t0 = time.perf_counter()
+        req = self.requests[prid]
+        state = self.chunk_state.get(prid)
+        if state is None:
+            assert prid not in self.partial, \
+                "request already mid layer-granular prefill"
+            self.claim_prefix(prid)
+            state = self.chunk_state.get(prid)
+        if state is None:
+            state = self.chunk_state[prid] = ChunkedPrefill(
+                prid, np.asarray(self.token_buf[prid][: req.prompt_len],
+                                 np.int32))
+        c = min(int(chunk_tokens), req.prompt_len - state.done)
+        assert c >= 1, "prefill already complete"
+        steps = min(steps, c)   # every sub-chunk must carry >= 1 token
+        if steps <= 1:
+            return {r: [t] for r, t in
+                    self._mixed_dispatch(rids, prid, c).items()}
+        req.phase = Phase.PREFILLING
+        # the WHOLE horizon's chunk is claimed up front (claim-ahead to the
+        # horizon end); sub-chunks land into it iteration by iteration
+        self.cache.ensure(prid, state.done + c)
+        subs = split_chunk(c, steps)
+        C = self.pad_chunk(max(subs))
+        c_toks = np.zeros((steps, C), np.int32)
+        c_meta = np.zeros((steps, 2), np.int32)
+        pos = state.done
+        for i, s in enumerate(subs):
+            c_toks[i, :s] = state.tokens[pos: pos + s]
+            c_meta[i] = (pos, s)
+            pos += s
+        table = self.cache.tables[prid]
+        cp = self.pad_pages(len(table))
+        c_tables = np.zeros(cp, np.int32)
+        c_tables[: len(table)] = table
+        if rids:
+            ahead = [min(steps, self.requests[r].remaining) for r in rids]
+            assert min(ahead) >= 1, "request already finished"
+            bucket, pages, tokens, positions, tables, _ = self._decode_args(
+                rids, claim_ahead=ahead)
+        else:
+            ahead = []
+            bucket, pages = 0, 0
+            tokens = positions = np.zeros(0, np.int32)
+            tables = np.zeros((0, 0), np.int32)
+        active = np.zeros(bucket, np.int32)
+        active[: len(rids)] = ahead
+        temps, topks = self._sampling_arrays(rids, bucket + 1)
+        d = (self.sampling.temperature, self.sampling.top_k)
+        temps[bucket], topks[bucket] = self.req_sampling.get(prid, d)
+        sampled = (self.sampling.temperature > 0
+                   or any(r in self.req_sampling for r in [*rids, prid]))
+        fn = self._mixed_horizon_fn(bucket, pages, C, cp, steps, sampled)
+        key, first_step = self._next_key_block(steps)
+        toks_dev, self.cache.k_pool, self.cache.v_pool = fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(tables), self.cache.k_pool, self.cache.v_pool,
+            jnp.asarray(active), jnp.asarray(c_toks), jnp.asarray(c_meta),
+            jnp.asarray(c_tables), key, first_step,
+            jnp.asarray(temps), jnp.asarray(topks))
+        nxt = np.asarray(toks_dev)  # (steps, bucket + 1) — the ONLY sync
+        self.stats.host_syncs += 1
+        self.stats.dispatches_by_kind["mixed_horizon"] += 1
+        dt = time.perf_counter() - t0
+        out: dict[int, list[int]] = {}
+        total = 0
+        for i, r in enumerate(rids):
+            rq = self.requests[r]
+            a = int(active[i])
+            toks = [int(x) for x in nxt[:a, i]]
+            buf = self.token_buf[r]
+            for tok in toks:
+                buf.append(tok)
+            rq.generated += a
+            # the horizon's wall time amortizes over its steps; a row that
+            # exits early is only charged for the steps it ran
+            rq.decode_time_sum += dt * a / steps
+            total += a
+            out[r] = toks
+            if rq.done:
+                rq.phase = Phase.FINISHED
+                self.cache.free(r)
+                self.req_sampling.pop(r, None)
+        state.done += c
+        req.prefill_tokens_done = state.done
+        self.stats.prefill_chunks += steps
+        if rids:
+            self.stats.decode_tokens += total
+            self.stats.decode_steps += steps
+            self.stats.horizon_steps += steps
+            self.stats.mixed_steps += steps
+            self.stats.decode_seconds += dt
+        else:
+            self.stats.prefill_seconds += dt
+        if state.done >= req.prompt_len:
+            # sub-chunks all carry >= 1 token and sum to c, so the prompt
+            # can only complete at the FINAL iteration — its chunk-row
+            # sample is the first generated token
+            self.token_buf[prid].append(int(nxt[-1, bucket]))
+            req.generated = 1
+            req.phase = Phase.DECODING
+            self.stats.prefill_tokens += req.prompt_len
+            if self.cache.prefix is not None:
                 self.cache.prefix.insert(
                     state.tokens.tolist(), self.cache.tables[prid])
             del self.chunk_state[prid]

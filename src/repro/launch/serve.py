@@ -89,7 +89,41 @@ def build_traces(args, cfg):
     return online, offline
 
 
-def main(argv=None):
+def _auto_or_nonneg_int(knob):
+    """argparse type: 'auto' or an int >= 0 (0 disables the feature).
+    Raises ``ArgumentTypeError`` so junk exits with a one-line usage error
+    instead of a deep ValueError traceback from the runtime."""
+    def parse(s):
+        if s == "auto":
+            return s
+        try:
+            n = int(s)
+        except ValueError:
+            raise argparse.ArgumentTypeError(
+                f"{knob} must be 'auto' or an integer >= 0 (got {s!r})")
+        if n < 0:
+            raise argparse.ArgumentTypeError(
+                f"{knob} must be >= 0 (got {n}; 0 disables the feature)")
+        return n
+    return parse
+
+
+def _positive_int(knob):
+    """argparse type: an int >= 1."""
+    def parse(s):
+        try:
+            n = int(s)
+        except ValueError:
+            raise argparse.ArgumentTypeError(
+                f"{knob} must be an integer >= 1 (got {s!r})")
+        if n < 1:
+            raise argparse.ArgumentTypeError(
+                f"{knob} must be >= 1 (got {n}; omit it for unbounded)")
+        return n
+    return parse
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-7b")
     ap.add_argument("--policy", default="ooco", choices=list(POLICIES))
@@ -105,12 +139,14 @@ def main(argv=None):
                     help="deterministic trace replay: time advances by the "
                          "perf model instead of the wall clock")
     ap.add_argument("--chunk-tokens", default="auto",
+                    type=_auto_or_nonneg_int("--chunk-tokens"),
                     help="chunked-prefill token budget per fused mixed "
                          "step: 'auto' picks it from the roofline ridge "
                          "(PerfModel.suggest_chunk_tokens), N fixes it, "
                          "0 disables chunking (legacy whole-prompt prefill "
                          "with layer-level interruption)")
     ap.add_argument("--decode-horizon", default="auto",
+                    type=_auto_or_nonneg_int("--decode-horizon"),
                     help="multi-step decode horizon on latency-relaxed "
                          "rounds: 'auto' picks K from the decode roofline "
                          "(PerfModel.suggest_decode_horizon, amortizing the "
@@ -158,19 +194,29 @@ def main(argv=None):
                     help="seed for the fault injector's RNG (flaky-transfer "
                          "coin flips, retry-backoff jitter); replays with "
                          "the same seed are bit-reproducible")
-    ap.add_argument("--max-online-queue", type=int, default=None,
+    ap.add_argument("--max-online-queue",
+                    type=_positive_int("--max-online-queue"), default=None,
                     help="bounded online admission queue: overflowing "
                          "submits raise AdmissionRejected (backpressure) "
                          "instead of growing host state without bound")
-    args = ap.parse_args(argv)
+    ap.add_argument("--replay-hw", default="cpu", choices=["cpu", "v5e"],
+                    help="virtual-clock hardware calibration preset: 'cpu' "
+                         "scales rates to CPU-smoke-test sizes; 'v5e' keeps "
+                         "the real TPU v5e dispatch overheads against "
+                         "uniformly scaled rates — the datacenter "
+                         "overhead:work ratio where horizons pay "
+                         "(ignored without --virtual-clock)")
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
     clock = VirtualClock() if args.virtual_clock else WallClock()
-    hw = replay_hw() if args.virtual_clock else None
-    chunk = args.chunk_tokens if args.chunk_tokens == "auto" \
-        else int(args.chunk_tokens)
-    horizon = args.decode_horizon if args.decode_horizon == "auto" \
-        else int(args.decode_horizon)
+    hw = replay_hw(args.replay_hw) if args.virtual_clock else None
+    chunk = args.chunk_tokens
+    horizon = args.decode_horizon
     runtime = PoolRuntime(cfg, policy=args.policy, n_strict=args.strict,
                           n_relaxed=args.relaxed, clock=clock,
                           slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot,

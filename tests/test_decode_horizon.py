@@ -233,16 +233,40 @@ class TestHorizonScheduling:
             assert sch.decode_horizon_steps(batch, self.PM,
                                             requested=req) == 1
 
-    def test_plan_carries_horizon_only_when_chunkless(self):
+    def test_plan_carries_horizon_with_and_without_chunk(self):
         decode = self._reqs(Kind.OFFLINE, 4)
         plan = sch.token_budget_schedule([], decode, None, 0, self.PM,
                                          relaxed_cap=8, horizon=4)
         assert plan.horizon == 4 and plan.chunk_tokens == 0
         assert plan.total_tokens == 4 * len(plan.decode)
+        # a riding chunk no longer drops the horizon: the relaxed round
+        # becomes one fused mixed-horizon dispatch whose budget covers
+        # decode x K + chunk
         pf = Request(Kind.OFFLINE, 0.0, 64, 8)
         plan = sch.token_budget_schedule([], decode, pf, 64, self.PM,
-                                         relaxed_cap=8, horizon=4)
+                                         relaxed_cap=8, horizon=4, bucket=8)
+        assert plan.chunk_tokens > 0 and plan.horizon > 1
+        # ... clamped so every sub-chunk carries >= one bucket of prefill
+        assert plan.horizon <= max(plan.chunk_tokens // 8, 1)
+        assert plan.total_tokens == (len(plan.decode) * plan.horizon
+                                     + plan.chunk_tokens)
+        # tiny chunk: the clamp collapses K to chunk // bucket
+        plan = sch.token_budget_schedule([], decode, pf, 8, self.PM,
+                                         relaxed_cap=8, horizon=4, bucket=8)
+        assert plan.chunk_tokens == 8 and plan.horizon == 1
+        # latency-strict chunked rounds keep single-step fused semantics
+        plan = sch.token_budget_schedule([], decode, pf, 64, self.PM,
+                                         relaxed_cap=8, horizon=4, bucket=8,
+                                         slo=10.0)
         assert plan.chunk_tokens > 0 and plan.horizon == 1
+
+    def test_split_chunk_invariants(self):
+        for chunk, steps in [(16, 4), (17, 4), (13, 16), (1, 8), (64, 5)]:
+            subs = sch.split_chunk(chunk, steps)
+            assert sum(subs) == chunk
+            assert min(subs) >= 1
+            assert max(subs) - min(subs) <= 1
+            assert len(subs) == min(steps, chunk)
 
 
 # ---------------------------------------------------------------------------

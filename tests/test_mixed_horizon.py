@@ -1,0 +1,360 @@
+"""Fused mixed horizons (PR 10): K decode iterations + K prefill sub-chunk
+slices in ONE jitted ``lax.scan`` dispatch.
+
+* **Parity**: ``mixed_horizon(rids, prid, chunk, K)`` must emit
+  bit-identical token streams to K serial ``mixed_step`` calls over the
+  same ``split_chunk`` slices — greedy AND seeded temperature/top-k
+  sampling — with exactly one device->host sync per horizon.
+* **Early exit**: a decode request hitting ``max_new_tokens`` mid-horizon
+  emits no extra tokens and leaves co-batched requests and the riding
+  chunk exact.
+* **Pause/resume**: stopping at a horizon boundary and continuing with
+  serial ``mixed_step`` calls recomputes nothing and changes no tokens.
+* **Prefix-cache warm starts**: a request whose prompt prefix is already
+  resident lands only the cold suffix through the fused path and still
+  matches whole-prompt reference generation.
+* **Donation**: the lowered fused scan aliases both KV pools
+  (``tf.aliasing_output`` x2) and the optimized HLO contains no
+  full-pool-shaped copy.
+* **Roofline choice**: ``PerfModel.suggest_mixed_horizon`` fuses on
+  overhead-dominated hardware, stays serial when per-sub-chunk weight
+  streaming would cost more than the amortized dispatch overhead, and
+  shrinks K under the §3.4.1 preemption bound (halved with online
+  arrivals queued).
+* **Budget property** (hypothesis): relaxed chunked plans with
+  ``horizon > 1`` never exceed the token budget and never produce a
+  sub-chunk smaller than one bucket.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.runtime import PoolRuntime, VirtualClock, replay_hw
+from repro.configs import get_config
+from repro.core import scheduling as sch
+from repro.core.perf_model import PerfModel
+from repro.core.request import Kind, Request
+from repro.data import traces as tr
+from repro.engine.engine import SamplingParams, ServingEngine
+from repro.models.model import build_model
+
+
+@pytest.fixture(scope="module")
+def built():
+    cfg = get_config("qwen2.5-7b").reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _ref_generate(model, params, prompt, n_new):
+    toks = list(prompt)
+    logits, cache = model.prefill(
+        params, {"tokens": jnp.asarray([prompt], jnp.int32)},
+        cache_len=len(prompt) + n_new)
+    toks.append(int(jnp.argmax(logits, -1)[0]))
+    for _ in range(n_new - 1):
+        logits, cache = model.decode_step(
+            params, jnp.asarray([toks[-1]], jnp.int32), cache)
+        toks.append(int(jnp.argmax(logits, -1)[0]))
+    return toks
+
+
+def _setup_engine(cfg, model, params, *, dec_specs, pf_len, pf_out=6,
+                  sampling=None, seed=3, overrides=(), prefix_cache=False):
+    """Engine with resident decode requests (prompt_len, output_len specs)
+    plus one un-prefilled request for the chunked path. ``overrides`` are
+    (slot, temperature, top_k) per-request sampling overrides; slot == -1
+    targets the prefill request."""
+    eng = ServingEngine(model, params, num_pages=256, page_size=8,
+                        sampling=sampling, prefix_cache=prefix_cache)
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for n, out in dec_specs:
+        r = Request(Kind.OFFLINE, 0.0, n, out)
+        eng.add_request(r, list(rng.randint(0, cfg.vocab_size, n)))
+        eng.prefill(r.rid)
+        reqs.append(r)
+    pf = Request(Kind.OFFLINE, 0.0, pf_len, pf_out)
+    eng.add_request(pf, list(rng.randint(0, cfg.vocab_size, pf_len)))
+    for slot, temp, top_k in overrides:
+        eng.set_sampling((pf if slot == -1 else reqs[slot]).rid, temp, top_k)
+    return eng, reqs, pf
+
+
+def _drive_fused(eng, reqs, pf, chunk, K):
+    """Advance the prefill to completion via fused horizons, then drain
+    decode. Returns syncs used per horizon dispatch."""
+    per_dispatch = []
+    while pf.prefill_tokens_done < pf.prompt_len:
+        active = [r.rid for r in reqs if not r.done]
+        s0 = eng.stats.host_syncs
+        eng.mixed_horizon(active, pf.rid, chunk, K)
+        per_dispatch.append(eng.stats.host_syncs - s0)
+    live = [r for r in reqs + [pf] if not r.done]
+    while live:
+        eng.decode_step([r.rid for r in live])
+        live = [r for r in live if not r.done]
+    return per_dispatch
+
+
+def _drive_serial(eng, reqs, pf, chunk, K):
+    """The serial reference: the SAME sub-chunk slices as one fused
+    horizon, one ``mixed_step`` dispatch (and one sync) each."""
+    while pf.prefill_tokens_done < pf.prompt_len:
+        c = min(chunk, pf.prompt_len - pf.prefill_tokens_done)
+        for s in sch.split_chunk(c, min(K, c)):
+            eng.mixed_step([r.rid for r in reqs if not r.done], pf.rid, s)
+    live = [r for r in reqs + [pf] if not r.done]
+    while live:
+        eng.decode_step([r.rid for r in live])
+        live = [r for r in live if not r.done]
+
+
+class TestMixedHorizonParity:
+    DEC = ((13, 24), (21, 2))   # second rid finishes mid-horizon (early exit)
+
+    def _streams(self, eng, reqs, pf):
+        return [eng.token_buf[r.rid][:] for r in reqs + [pf]]
+
+    def test_greedy_parity_early_exit_one_sync(self, built):
+        cfg, model, params = built
+        fused, f_reqs, f_pf = _setup_engine(cfg, model, params,
+                                            dec_specs=self.DEC, pf_len=29)
+        serial, s_reqs, s_pf = _setup_engine(cfg, model, params,
+                                             dec_specs=self.DEC, pf_len=29)
+        per_dispatch = _drive_fused(fused, f_reqs, f_pf, 13, 4)
+        _drive_serial(serial, s_reqs, s_pf, 13, 4)
+        assert self._streams(fused, f_reqs, f_pf) == \
+            self._streams(serial, s_reqs, s_pf)
+        assert per_dispatch == [1] * len(per_dispatch)  # ONE sync/horizon
+        assert fused.stats.dispatches_by_kind["mixed_horizon"] == \
+            len(per_dispatch)
+        assert serial.stats.dispatches_by_kind["mixed_horizon"] == 0
+        assert fused.stats.host_syncs < serial.stats.host_syncs
+
+    def test_sampled_parity(self, built):
+        cfg, model, params = built
+        sp = SamplingParams(temperature=0.9, top_k=7, seed=11)
+        ov = ((0, 0.6, 3), (-1, 1.1, 9))   # per-request incl. prefill rid
+        fused, f_reqs, f_pf = _setup_engine(
+            cfg, model, params, dec_specs=self.DEC, pf_len=29, sampling=sp,
+            overrides=ov)
+        serial, s_reqs, s_pf = _setup_engine(
+            cfg, model, params, dec_specs=self.DEC, pf_len=29, sampling=sp,
+            overrides=ov)
+        _drive_fused(fused, f_reqs, f_pf, 13, 4)
+        _drive_serial(serial, s_reqs, s_pf, 13, 4)
+        assert self._streams(fused, f_reqs, f_pf) == \
+            self._streams(serial, s_reqs, s_pf)
+        # the fused path reserved exactly the K keys the serial steps used
+        assert fused._sample_step == serial._sample_step
+
+    def test_chunk_only_horizon(self, built):
+        cfg, model, params = built
+        fused, _, f_pf = _setup_engine(cfg, model, params, dec_specs=(),
+                                       pf_len=23)
+        serial, _, s_pf = _setup_engine(cfg, model, params, dec_specs=(),
+                                        pf_len=23)
+        per_dispatch = _drive_fused(fused, [], f_pf, 12, 4)
+        _drive_serial(serial, [], s_pf, 12, 4)
+        assert fused.token_buf[f_pf.rid][:] == serial.token_buf[s_pf.rid][:]
+        assert per_dispatch == [1] * len(per_dispatch)
+
+    def test_pause_resume_zero_recompute(self, built):
+        cfg, model, params = built
+        eng, reqs, pf = _setup_engine(cfg, model, params,
+                                      dec_specs=((13, 24),), pf_len=30)
+        serial, s_reqs, s_pf = _setup_engine(cfg, model, params,
+                                             dec_specs=((13, 24),),
+                                             pf_len=30)
+        eng.mixed_horizon([reqs[0].rid], pf.rid, 12, 3)   # one horizon
+        assert eng.prefill_progress(pf.rid) == 12         # paused mid-prompt
+        assert pf.recompute_tokens == 0
+        # resume with SERIAL steps over the same slices: no recompute, no
+        # token change — the horizon boundary is a clean chunk boundary
+        while pf.prefill_tokens_done < pf.prompt_len:
+            c = min(12, pf.prompt_len - pf.prefill_tokens_done)
+            for s in sch.split_chunk(c, min(3, c)):
+                eng.mixed_step([reqs[0].rid], pf.rid, s)
+        assert pf.recompute_tokens == 0
+        live = [r for r in reqs + [pf] if not r.done]
+        while live:
+            eng.decode_step([r.rid for r in live])
+            live = [r for r in live if not r.done]
+        _drive_serial(serial, s_reqs, s_pf, 12, 3)
+        for a, b in zip(reqs + [pf], s_reqs + [s_pf]):
+            assert eng.token_buf[a.rid][:] == serial.token_buf[b.rid][:]
+
+    def test_prefix_cache_warm_start(self, built):
+        cfg, model, params = built
+        eng, _, pf_a = _setup_engine(cfg, model, params, dec_specs=(),
+                                     pf_len=24, pf_out=4, prefix_cache=True)
+        prompt_a = eng.token_buf[pf_a.rid][: pf_a.prompt_len]
+        _drive_fused(eng, [], pf_a, 8, 4)        # completion publishes pages
+        rng = np.random.RandomState(9)
+        prompt_b = prompt_a + list(rng.randint(0, cfg.vocab_size, 8))
+        pf_b = Request(Kind.OFFLINE, 0.0, len(prompt_b), 4)
+        eng.add_request(pf_b, prompt_b)
+        assert eng.claim_prefix(pf_b.rid) > 0    # warm prefix resident
+        _drive_fused(eng, [], pf_b, 8, 4)        # only the suffix is cold
+        assert eng.token_buf[pf_b.rid][:] == \
+            _ref_generate(model, params, prompt_b, 4)
+
+    def test_fused_scan_donates_both_pools(self, built):
+        cfg, model, params = built
+        eng = ServingEngine(model, params, num_pages=64, page_size=8)
+        fn = eng._mixed_horizon_fn(2, 8, 8, 8, 4)
+        zi = jnp.zeros((2,), jnp.int32)
+        lowered = fn.lower(
+            eng.params, zi, zi, jnp.zeros((2, 8), jnp.int32),
+            eng.cache.k_pool, eng.cache.v_pool, jnp.ones((2,), jnp.int32),
+            jnp.zeros((4, 8), jnp.int32), jnp.zeros((4, 2), jnp.int32),
+            jnp.zeros((8,), jnp.int32), jax.random.PRNGKey(0), jnp.int32(1),
+            jnp.zeros((3,), jnp.float32), jnp.zeros((3,), jnp.int32))
+        assert lowered.as_text().count("tf.aliasing_output") == 2
+        dims = ",".join(map(str, eng.cache.k_pool.shape))
+        hlo = lowered.compile().as_text()
+        assert not [ln for ln in hlo.splitlines()
+                    if "copy(" in ln and f"[{dims}]" in ln]
+
+
+class TestSuggestMixedHorizon:
+    CFG = get_config("qwen2.5-7b").reduced()
+    PM_DC = PerfModel(CFG, replay_hw("v5e"))   # overhead-dominated
+    PM_CPU = PerfModel(CFG, replay_hw())       # streaming-dominated
+
+    def test_overhead_dominated_fuses(self):
+        k = self.PM_DC.suggest_mixed_horizon(8, 72, [64] * 2,
+                                             preempt_latency=0.5,
+                                             max_horizon=16)
+        assert k == 8   # k <= chunk_tokens always
+
+    def test_streaming_dominated_stays_serial(self):
+        # on cpu-scale hw a sub-chunk's weight stream costs far more than
+        # the dispatch overhead it amortizes: the throughput argmax keeps
+        # the round serial
+        assert self.PM_CPU.suggest_mixed_horizon(
+            48, 112, [64] * 8, preempt_latency=0.5, max_horizon=16) == 1
+
+    def test_preemption_bound_shrinks(self):
+        loose = self.PM_DC.suggest_mixed_horizon(
+            8, 72, [64] * 2, preempt_latency=0.5, max_horizon=16)
+        tight = self.PM_DC.suggest_mixed_horizon(
+            8, 72, [64] * 2, preempt_latency=0.02, max_horizon=16)
+        assert tight < loose
+
+    def test_queued_online_shrinks(self):
+        base = self.PM_DC.suggest_mixed_horizon(
+            8, 72, [64] * 2, preempt_latency=0.04, max_horizon=16)
+        queued = self.PM_DC.suggest_mixed_horizon(
+            8, 72, [64] * 2, preempt_latency=0.04, queued_online=True,
+            max_horizon=16)
+        assert queued < base   # half the preemption budget -> smaller K
+
+    def test_no_decode_returns_one(self):
+        assert self.PM_DC.suggest_mixed_horizon(48, 112, [],
+                                                max_horizon=16) == 1
+
+    def test_chunkless_delegates_to_decode_horizon(self):
+        assert self.PM_CPU.suggest_mixed_horizon(
+            0, 0, [64] * 4, preempt_latency=0.5, max_horizon=8) == \
+            self.PM_CPU.suggest_decode_horizon(
+                [64] * 4, preempt_latency=0.5, max_horizon=8)
+
+    def test_caps(self):
+        assert self.PM_DC.suggest_mixed_horizon(
+            3, 67, [64] * 8, preempt_latency=0.5, max_horizon=16) <= 3
+        assert self.PM_DC.suggest_mixed_horizon(
+            8, 72, [64] * 2, preempt_latency=0.5, max_horizon=2) <= 2
+
+
+class TestBudgetSplitProperty:
+    PM = TestSuggestMixedHorizon.PM_CPU
+
+    @given(remaining=st.integers(1, 256), budget=st.integers(1, 128),
+           horizon=st.integers(1, 16), n_dec=st.integers(0, 8))
+    @settings(max_examples=60, deadline=None)
+    def test_budget_and_bucket_floor(self, remaining, budget, horizon,
+                                     n_dec):
+        decode = [Request(Kind.OFFLINE, 0.0, 32, 16) for _ in range(n_dec)]
+        pf = Request(Kind.OFFLINE, 0.0, remaining, 8)
+        plan = sch.token_budget_schedule([], decode, pf, remaining, self.PM,
+                                         relaxed_cap=8, budget_tokens=budget,
+                                         horizon=horizon, bucket=8)
+        chunk = plan.chunk_tokens
+        assert chunk <= remaining
+        assert chunk <= max(budget, 8)   # relaxed floor is one bucket
+        assert plan.horizon <= max(horizon, 1)
+        assert plan.total_tokens == len(plan.decode) * plan.horizon + chunk
+        if plan.horizon > 1:
+            subs = sch.split_chunk(chunk, plan.horizon)
+            assert sum(subs) == chunk and len(subs) == plan.horizon
+            assert min(subs) >= 8        # no sub-chunk below one bucket
+
+
+class TestRuntimeMixedHorizon:
+    def test_datacenter_replay_deterministic_and_counted(self, built):
+        """Under replay_hw('v5e') the ooco runtime fires fused
+        mixed-horizon rounds; two replays with the same seed are
+        bit-identical and the summary exposes both the round counter and
+        per-kind dispatch counts."""
+        cfg, model, params = built
+        outs = []
+        donor = None
+        for _ in range(2):
+            rt = PoolRuntime(cfg, policy="ooco", n_strict=1, n_relaxed=2,
+                             clock=VirtualClock(), backend="ref",
+                             num_pages=256, page_size=8, slo_ttft=2.0,
+                             slo_tpot=0.06, hw=replay_hw("v5e"), seed=0,
+                             model=model, params=params,
+                             chunk_tokens="auto", decode_horizon="auto",
+                             kernels_from=donor)
+            donor = donor or rt.kernel_donor
+            online = tr.online_trace("ooc", duration=4.0, mean_qps=8.0,
+                                     seed=0)
+            offline = tr.with_uniform_qps(
+                tr.offline_requests(400, seed=1), 150.0)
+            summary = rt.run(online, offline, duration=4.0, max_prompt=48,
+                             max_output=48, drain=False)
+            outs.append((summary, rt.finished_signature()))
+        (s1, sig1), (s2, sig2) = outs
+        assert sig1 == sig2
+        assert s1 == s2
+        assert s1["mixed_horizon_rounds"] > 0
+        assert s1["dispatches_by_kind"]["mixed_horizon"] == \
+            s1["mixed_horizon_rounds"]
+        assert s1["online_slo_attainment"] == 1.0
+
+
+class TestServeKnobValidation:
+    """--chunk-tokens / --decode-horizon / --max-online-queue reject junk
+    with a one-line usage error (exit 2), not a runtime traceback."""
+
+    def test_valid_values_parse(self):
+        from repro.launch.serve import build_parser
+        ap = build_parser()
+        ns = ap.parse_args(["--chunk-tokens", "auto", "--decode-horizon",
+                            "4", "--max-online-queue", "3",
+                            "--replay-hw", "v5e"])
+        assert ns.chunk_tokens == "auto" and ns.decode_horizon == 4
+        assert ns.max_online_queue == 3 and ns.replay_hw == "v5e"
+        assert ap.parse_args(["--chunk-tokens", "0"]).chunk_tokens == 0
+        assert ap.parse_args([]).max_online_queue is None
+
+    @pytest.mark.parametrize("argv", [
+        ["--chunk-tokens", "-1"],
+        ["--chunk-tokens", "junk"],
+        ["--decode-horizon", "-2"],
+        ["--decode-horizon", "1.5"],
+        ["--max-online-queue", "0"],
+        ["--max-online-queue", "none"],
+        ["--replay-hw", "h100"],
+    ])
+    def test_junk_exits_with_usage_error(self, argv):
+        from repro.launch.serve import build_parser
+        with pytest.raises(SystemExit) as exc:
+            build_parser().parse_args(argv)
+        assert exc.value.code == 2
